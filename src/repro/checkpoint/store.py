@@ -1,0 +1,76 @@
+"""npz-based pytree checkpointing for continual-training inheritance.
+
+The paper's protocol inherits a pre-trained checkpoint and keeps training
+under a different mode; ``save_pytree``/``load_pytree`` round-trip arbitrary
+params/optimizer-state pytrees (dicts/lists/tuples of arrays + scalars).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/#{i}"))
+    elif tree is None:
+        out[prefix + "/@none"] = np.zeros(0)
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.kind == "V":  # bfloat16 etc.: stage losslessly as f32
+            arr = np.asarray(jnp.asarray(tree, jnp.float32))
+        out[prefix] = arr
+    return out
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat = _flatten(tree)
+    spec = jax.tree.map(lambda x: None, tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __spec__=np.frombuffer(
+        json.dumps(_spec_of(tree)).encode(), dtype=np.uint8), **flat)
+
+
+def _spec_of(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        return {"t": "d", "k": {k: _spec_of(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"t": "t", "k": [_spec_of(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"t": "l", "k": [_spec_of(v) for v in tree]}
+    if tree is None:
+        return {"t": "n"}
+    return {"t": "a", "d": str(jnp.asarray(tree).dtype)}
+
+
+def _rebuild(spec: Any, flat: dict[str, np.ndarray], prefix: str = "") -> Any:
+    t = spec["t"]
+    if t == "d":
+        return {k: _rebuild(v, flat, f"{prefix}/{k}")
+                for k, v in spec["k"].items()}
+    if t in ("t", "l"):
+        seq = [_rebuild(v, flat, f"{prefix}/#{i}")
+               for i, v in enumerate(spec["k"])]
+        return tuple(seq) if t == "t" else seq
+    if t == "n":
+        return None
+    arr = jnp.asarray(flat[prefix])
+    dt = spec.get("d")
+    return arr.astype(dt) if dt and str(arr.dtype) != dt else arr
+
+
+def load_pytree(path: str) -> Any:
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files if k != "__spec__"}
+        spec = json.loads(bytes(data["__spec__"]).decode())
+    return _rebuild(spec, flat)

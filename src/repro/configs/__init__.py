@@ -1,0 +1,41 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (GBAConfig, InputShape, INPUT_SHAPES,
+                                ModelConfig, TrainConfig)
+from repro.configs.recsys import RECSYS_CONFIGS, RecsysConfig
+
+_ARCH_MODULES = {
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "granite-8b": "granite_8b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "gemma3-12b": "gemma3_12b",
+    "mamba2-780m": "mamba2_780m",
+    "starcoder2-3b": "starcoder2_3b",
+    "phi3.5-moe-42b-a6.6b": "phi3p5_moe_42b_a6p6b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama-3.2-vision-11b": "llama3p2_vision_11b",
+    "gemma2-27b": "gemma2_27b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS", "GBAConfig", "INPUT_SHAPES", "InputShape", "ModelConfig",
+    "RECSYS_CONFIGS", "RecsysConfig", "TrainConfig", "all_configs",
+    "get_config",
+]

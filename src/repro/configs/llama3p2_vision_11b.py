@@ -1,0 +1,22 @@
+"""Llama 3.2 Vision 11B [hf:meta-llama/Llama-3.2-11B-Vision].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256 — cross-attention
+image layers every 5th layer.  Vision encoder is a stub per the carve-out:
+input_specs() provides projected patch embeddings (B, num_image_tokens,
+d_model); we implement the language decoder with interleaved cross-attn.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128_256,
+    block_pattern=("global", "global", "global", "global", "cross"),
+    num_image_tokens=1601,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

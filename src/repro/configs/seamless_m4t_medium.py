@@ -1,0 +1,24 @@
+"""SeamlessM4T-medium [arXiv:2308.11596].
+
+12L d_model=1024 16H (kv=16) d_ff=4096 vocab=256206 — encoder-decoder,
+multimodal.  Per the carve-out the speech frontend is a stub: input_specs()
+provides precomputed frame embeddings (B, encoder_frames, d_model); we
+implement the 12-layer self-attn encoder + 12-layer cross-attn decoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256_206,
+    block_pattern=("cross",),
+    encoder_layers=12,
+    encoder_frames=1024,
+    norm="layernorm",
+    source="arXiv:2308.11596",
+)

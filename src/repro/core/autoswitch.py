@@ -1,0 +1,52 @@
+"""Beyond-paper: adaptive sync/GBA switching (the paper's §6 future work).
+
+The paper: "Currently, GBA requires the users to select the training mode
+according to their own judgment on the cluster status.  In the future, we
+will attempt to make GBA be adaptive to the cluster status."
+
+GBA makes switching *free*; this controller decides *when*.  It uses only
+PS-observable telemetry — per-worker completed-batch counts over the last
+window — and estimates what each mode's throughput would be on the current
+cluster:
+
+  sync QPS  ~= N * B * min_w(rate_w)     (barrier: slowest worker paces all)
+  GBA QPS   ~= B * sum_w(rate_w)         (no waiting)
+
+It switches to GBA when the estimated speedup exceeds ``switch_up`` (with
+hysteresis ``switch_down`` for the way back, to avoid flapping).  Because
+GBA holds the global batch, switching costs no accuracy (C2) — so the
+controller optimizes pure throughput.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class AutoSwitchController:
+    switch_up: float = 1.5      # est. GBA/sync speedup to leave sync
+    switch_down: float = 1.15   # est. speedup below which to return
+    mode: str = "sync"
+    history: list = field(default_factory=list)
+
+    def estimate_speedup(self, worker_rates) -> float:
+        """worker_rates: per-worker samples/s measured over the window
+        (``SimMetrics.worker_rates``; on a real PS: completions / wall)."""
+        rates = np.asarray(worker_rates, dtype=np.float64)
+        slowest = rates.min()
+        if slowest <= 0:
+            return float("inf")
+        sync_qps = len(rates) * slowest
+        gba_qps = rates.sum()
+        return float(gba_qps / sync_qps)
+
+    def decide(self, worker_rates) -> str:
+        s = self.estimate_speedup(worker_rates)
+        if self.mode == "sync" and s >= self.switch_up:
+            self.mode = "gba"
+        elif self.mode == "gba" and s <= self.switch_down:
+            self.mode = "sync"
+        self.history.append((s, self.mode))
+        return self.mode

@@ -1,0 +1,149 @@
+"""GBA aggregation — the paper's core op, as jittable JAX functions.
+
+Two entry points:
+
+* :func:`aggregate_dense` — Algorithm 2 lines 20/22: decay each of the M
+  buffered gradients by the token-control rule, weighted-sum, divide by
+  ``N_a = M``.  Used for every dense parameter and, stacked per-leaf, for
+  whole LM parameter pytrees.
+
+* :func:`aggregate_embedding` — Algorithm 2 lines 21/23: per-ID treatment of
+  the sparse module.  Each buffered sparse gradient arrives as (ids, rows);
+  a row is decayed against the global step *its ID* last saw (the tagged
+  ``last_update``), and the aggregate is divided by the number of buffer
+  slots that actually touched the ID — not by M.
+
+Both are pure functions usable inside pjit/shard_map; the Pallas kernel in
+``repro.kernels.gba_aggregate`` is a drop-in replacement for the inner
+weighted reduction of :func:`aggregate_dense`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.staleness import DECAY_FNS, threshold_decay
+
+Params = Any
+
+
+def decay_weights(tokens: jax.Array, global_step: jax.Array, iota: int,
+                  strategy: str = "threshold") -> jax.Array:
+    """(M,) aggregation weights from the token-control rule."""
+    return DECAY_FNS[strategy](tokens, global_step, iota)
+
+
+def aggregate_dense(grads_stacked: Params, tokens: jax.Array,
+                    global_step: jax.Array, iota: int,
+                    strategy: str = "threshold") -> Params:
+    """grads_stacked: pytree with leading M axis -> decayed mean over M.
+
+    Follows Alg. 2 line 22: weighted sum divided by N_a (= M), so dropped
+    slots shrink the effective gradient rather than re-normalizing — the
+    paper's choice, which keeps the update scale consistent with a full
+    buffer."""
+    w = decay_weights(tokens, global_step, iota, strategy)
+    m = w.shape[0]
+
+    def agg(g):
+        wf = w.reshape((m,) + (1,) * (g.ndim - 1)).astype(jnp.float32)
+        return (jnp.sum(g.astype(jnp.float32) * wf, axis=0) / m).astype(
+            g.dtype)
+
+    return jax.tree.map(agg, grads_stacked)
+
+
+def aggregate_embedding(ids_stacked: jax.Array, rows_stacked: jax.Array,
+                        tokens: jax.Array, last_update: jax.Array,
+                        global_step: jax.Array, iota: int, capacity: int
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Per-ID sparse aggregation (Alg. 2 lines 21/23).
+
+    ids_stacked:  (M, n) int32 hashed IDs per buffer slot
+    rows_stacked: (M, n, D) gradient rows aligned with ids
+    tokens:       (M,) slot tokens
+    last_update:  (capacity,) int32 global step each ID last saw
+
+    A slot's row for an ID is kept iff the ID is *not* severely stale w.r.t.
+    that slot's token: either the ID has not been updated since the token
+    was issued (data unchanged -> gradient still valid, Insight 2), or the
+    staleness k - token is within iota.  Kept rows are summed and divided by
+    the number of slots that touched the ID.
+
+    Returns (dense_grad (capacity, D), counts (capacity,)).
+    """
+    M, n = ids_stacked.shape
+    D = rows_stacked.shape[-1]
+    # slot-level hard threshold (same Eq. (1) clock)...
+    slot_ok = (global_step - tokens) <= iota                     # (M,)
+    # ...relaxed per-ID: if the ID was never updated after the token was
+    # issued, its gradient is exact regardless of slot staleness.
+    id_last = last_update[ids_stacked]                           # (M, n)
+    id_fresh = id_last <= tokens[:, None]
+    keep = (slot_ok[:, None] | id_fresh)                         # (M, n)
+
+    flat_ids = ids_stacked.reshape(-1)
+    flat_keep = keep.reshape(-1).astype(jnp.float32)
+    flat_rows = rows_stacked.reshape(-1, D).astype(jnp.float32)
+    flat_rows = flat_rows * flat_keep[:, None]
+
+    dense = jnp.zeros((capacity, D), jnp.float32).at[flat_ids].add(flat_rows)
+    counts = jnp.zeros((capacity,), jnp.float32).at[flat_ids].add(flat_keep)
+    dense = dense / jnp.maximum(counts, 1.0)[:, None]
+    return dense, counts
+
+
+# ---------------------------------------------------------------------------
+# GBA as a first-class train-step transform (used by launch/train + dry-run)
+# ---------------------------------------------------------------------------
+
+def init_buffer(params: Params, buffer_size: int) -> dict:
+    """M-slot gradient buffer living alongside the optimizer state.  Each
+    leaf gets a leading M axis; sharded exactly like the gradient."""
+    return {
+        "grads": jax.tree.map(
+            lambda p: jnp.zeros((buffer_size,) + p.shape, p.dtype), params),
+        "tokens": jnp.zeros((buffer_size,), jnp.int32),
+        "fill": jnp.zeros((), jnp.int32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def buffer_push_and_maybe_apply(
+        buffer: dict, grads: Params, token: jax.Array, iota: int,
+        apply_fn: Callable[[Params], tuple], noop_fn: Callable[[], tuple],
+        strategy: str = "threshold"):
+    """Push one gradient into the buffer; when full, decay-aggregate and call
+    ``apply_fn(agg_grads)``, else ``noop_fn()``.  Pure function of its
+    inputs; lowers to a single ``lax.cond`` — this is the shape the sharded
+    train step uses so that GBA is part of the compiled program."""
+    m = buffer["tokens"].shape[0]
+    slot = buffer["fill"] % m
+    new_grads = jax.tree.map(
+        lambda b, g: jax.lax.dynamic_update_index_in_dim(
+            b, g.astype(b.dtype), slot, 0),
+        buffer["grads"], grads)
+    new_tokens = jax.lax.dynamic_update_index_in_dim(
+        buffer["tokens"], token.astype(jnp.int32), slot, 0)
+    fill = buffer["fill"] + 1
+    is_full = (fill % m) == 0
+
+    def do_apply(operands):
+        bgrads, btokens, step = operands
+        agg = aggregate_dense(bgrads, btokens, step, iota, strategy)
+        return apply_fn(agg)
+
+    def do_noop(operands):
+        return noop_fn()
+
+    out = jax.lax.cond(is_full, do_apply, do_noop,
+                       (new_grads, new_tokens, buffer["step"]))
+    new_buffer = {
+        "grads": new_grads,
+        "tokens": new_tokens,
+        "fill": fill,
+        "step": buffer["step"] + is_full.astype(jnp.int32),
+    }
+    return out, new_buffer

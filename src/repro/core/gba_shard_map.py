@@ -1,0 +1,58 @@
+"""GBA with explicit collectives via shard_map (one PS worker per device).
+
+The pjit train step (launch.steps) treats the whole pod as ONE worker
+filling the M-slot buffer over time.  This module expresses the orthogonal
+mapping: every device group along the `data` axis is its own worker, each
+carrying its OWN token, and one global step aggregates all M = |data|
+worker gradients with the token-control decay — Algorithm 2 as a single
+`lax.psum` of pre-decayed gradients:
+
+    agg = psum_m( f(token_m, k) * grad_m / M )
+
+which is exactly ``aggregate_dense`` (tested equivalent), but with the
+collective schedule explicit — the form you deploy when worker batches
+genuinely differ per device (e.g. heterogeneous data streams).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.staleness import threshold_decay
+
+
+def make_gba_psum_step(mesh: Mesh, loss_fn: Callable, optimizer,
+                       iota: int, axis: str = "data"):
+    """Returns step(params, opt_state, batch, tokens, gstep) ->
+    (params, opt_state, loss).
+
+    batch: pytree with leading GLOBAL batch dim sharded over ``axis``;
+    tokens: (M,) int32, one per worker (device group along ``axis``).
+    """
+    m = mesh.shape[axis]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P()),
+        out_specs=(P(), P()),
+        check_rep=False)
+    def grad_agg(params, batch, token, gstep):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        w = threshold_decay(token.reshape(-1)[:1], gstep, iota)[0]
+        g = jax.tree.map(lambda x: x * (w / m).astype(x.dtype), g)
+        g = lax.psum(g, axis)              # decayed aggregate (Alg. 2 l.22)
+        loss = lax.psum(loss * w, axis) / m
+        return g, loss
+
+    def step(params, opt_state, batch, tokens, gstep):
+        agg, loss = grad_agg(params, batch, tokens, gstep)
+        params, opt_state = optimizer.update(params, agg, opt_state)
+        return params, opt_state, loss
+
+    return step

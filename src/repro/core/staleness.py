@@ -1,0 +1,40 @@
+"""Staleness decay strategies over the token index (paper Eq. (1)).
+
+The paper's strategy is the hard threshold; it notes "GBA could employ
+different staleness decay strategies", so we also provide smooth variants
+(exponential / linear) as beyond-paper extension hooks — all jittable and
+usable inside the sharded train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def threshold_decay(tokens: jax.Array, global_step: jax.Array,
+                    iota: int) -> jax.Array:
+    """Eq. (1): weight 0 if k - token > iota else 1.  tokens: (M,) int32."""
+    stale = global_step - tokens
+    return (stale <= iota).astype(jnp.float32)
+
+
+def exponential_decay(tokens: jax.Array, global_step: jax.Array,
+                      iota: int, alpha: float = 0.5) -> jax.Array:
+    """Beyond-paper: alpha^max(stale,0), hard zero past iota."""
+    stale = jnp.maximum(global_step - tokens, 0).astype(jnp.float32)
+    w = jnp.power(alpha, stale)
+    return jnp.where(global_step - tokens > iota, 0.0, w)
+
+
+def linear_decay(tokens: jax.Array, global_step: jax.Array,
+                 iota: int) -> jax.Array:
+    """Beyond-paper: 1 - stale/(iota+1), clipped at 0."""
+    stale = jnp.maximum(global_step - tokens, 0).astype(jnp.float32)
+    return jnp.clip(1.0 - stale / (iota + 1.0), 0.0, 1.0)
+
+
+DECAY_FNS = {
+    "threshold": threshold_decay,
+    "exponential": exponential_decay,
+    "linear": linear_decay,
+}

@@ -1,0 +1,55 @@
+"""The paper's token list (Sec. 4.1).
+
+Given a dataset of Q batches and buffer size M, the token list holds Q
+tokens in ascending order with each value repeated M times, so the i-th
+dispatched batch carries ``t_i = floor(i / M)`` — the global step it is
+*scheduled* to be aggregated at, and the reference point for data-staleness.
+
+Note: the paper's text writes ``t_i = floor(i / K)`` with ``K = ceil(Q/M)``;
+that formula contradicts its own constraints ("each token value repeats M
+times", "yields in ascending order", values in 0..K-1) — ``floor(i / M)`` is
+the unique assignment satisfying them, so we implement that and record the
+discrepancy here.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def num_global_steps(num_batches: int, buffer_size: int) -> int:
+    """K = ceil(Q / M)."""
+    return math.ceil(num_batches / buffer_size)
+
+
+def token_for_batch(batch_index, buffer_size: int):
+    """t_i = floor(i / M); works on ints and arrays."""
+    return batch_index // buffer_size
+
+
+def token_list(num_batches: int, buffer_size: int) -> jnp.ndarray:
+    return jnp.arange(num_batches, dtype=jnp.int32) // buffer_size
+
+
+class TokenList:
+    """Stateful FIFO view used by the PS-side of the simulator/trainer.
+
+    Mirrors Algorithm 2's token-generation thread: tokens are yielded in
+    ascending order, one per (pull) request."""
+
+    def __init__(self, num_batches: int, buffer_size: int):
+        self._next = 0
+        self._num_batches = num_batches
+        self._m = buffer_size
+
+    def fetch(self) -> int:
+        if self._next >= self._num_batches:
+            raise StopIteration("token list exhausted")
+        tok = self._next // self._m
+        self._next += 1
+        return tok
+
+    @property
+    def remaining(self) -> int:
+        return self._num_batches - self._next

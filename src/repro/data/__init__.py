@@ -1,0 +1,4 @@
+from repro.data.clickstream import ClickStream, make_clickstream
+from repro.data.lm import LMStream, make_lm_stream
+
+__all__ = ["ClickStream", "LMStream", "make_clickstream", "make_lm_stream"]

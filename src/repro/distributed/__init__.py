@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (batch_partition, cache_specs,
+                                        data_axes, param_specs)
+
+__all__ = ["batch_partition", "cache_specs", "data_axes", "param_specs"]

@@ -1,0 +1,224 @@
+"""Sharding rules: params / caches / batches -> PartitionSpec trees.
+
+Scheme (DESIGN.md §5): 2-D "fsdp + tensor" sharding on the single-pod
+(data=16, model=16) mesh —
+
+  weight matrices    rows over ``data`` (FSDP), cols over ``model`` (TP)
+  attention heads    q/kv head axis over ``model`` (hd fallback when the
+                     head count does not divide, e.g. starcoder2's 24H)
+  MoE experts        expert axis over ``model`` (expert parallel), d_model
+                     over ``data`` (FSDP) — the 1T kimi-k2 needs both
+  embeddings/vocab   rows over ``model``, dim over ``data``
+  norms/scalars      replicated
+
+The multi-pod mesh adds a ``pod`` axis used purely for data parallelism:
+params replicated across pods (DCN carries only gradient all-reduces),
+batch sharded over ``(pod, data)``.
+
+Every rule degrades to ``None`` when the dimension does not divide the mesh
+axis, so one engine covers all ten architectures.  GBA state (gradient
+buffer / accumulator) shards exactly like its gradient — the paper's
+"each PS owns the buffer of its partition" mapped onto SPMD.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % _axis_size(mesh, axis) == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axis: str) -> str | None:
+    return axis if _fits(dim, mesh, axis) else None
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"#{e.idx}")
+    return names
+
+
+def _leaf_spec(names: list[str], shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Trailing-dims rule table; leading stacked dims (scan repeats, GBA
+    buffer slots) are replicated."""
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    stacked = sum(1 for n in names if n in ("blocks", "encoder"))
+    # GBA buffer / stacked-grad leading axis is handled by the caller
+    # passing the unstacked shape; here stacked == scan repeats only.
+    core = shape[stacked:]
+    lead = (None,) * stacked
+
+    def spec(*dims):
+        return P(*lead, *dims)
+
+    if name in ("embed",):
+        return spec(_maybe(core[0], mesh, "model"),
+                    _maybe(core[1], mesh, "data"))
+    if name == "lm_head":
+        return spec(_maybe(core[0], mesh, "data"),
+                    _maybe(core[1], mesh, "model"))
+    if parent == "moe":                                     # expert parallel
+        if name == "router":
+            return spec(None, _maybe(core[1], mesh, "model"))
+        if name in ("wi_gate", "wi_up"):
+            e, d, f = core
+            return spec(_maybe(e, mesh, "model"),
+                        _maybe(d, mesh, "data"), None)
+        if name == "wo":
+            e, f, d = core
+            return spec(_maybe(e, mesh, "model"), None,
+                        _maybe(d, mesh, "data"))
+    if name in ("wq", "wk", "wv") and len(core) == 3:
+        d, h, hd = core
+        if _fits(h, mesh, "model"):
+            return spec(_maybe(d, mesh, "data"), "model", None)
+        return spec(_maybe(d, mesh, "data"), None,
+                    _maybe(hd, mesh, "model"))
+    if name == "wo" and len(core) == 3:                     # attention out
+        h, hd, d = core
+        if _fits(h, mesh, "model"):
+            return spec("model", None, _maybe(d, mesh, "data"))
+        return spec(None, _maybe(hd, mesh, "model"),
+                    _maybe(d, mesh, "data"))
+    if name in ("wi_gate", "wi_up") and len(core) == 2:     # dense mlp
+        return spec(_maybe(core[0], mesh, "data"),
+                    _maybe(core[1], mesh, "model"))
+    if name == "wo" and len(core) == 2:
+        return spec(_maybe(core[0], mesh, "model"),
+                    _maybe(core[1], mesh, "data"))
+    if name in ("in_proj", "w_z", "w_x", "w_B", "w_C", "w_dt"):  # mamba
+        return spec(_maybe(core[0], mesh, "data"),
+                    _maybe(core[1], mesh, "model"))
+    if name in ("conv_x", "conv_B", "conv_C"):
+        return spec(None, _maybe(core[1], mesh, "model"))
+    if name == "out_proj":
+        return spec(_maybe(core[0], mesh, "model"),
+                    _maybe(core[1], mesh, "data"))
+    if name == "conv_w":
+        return spec(None, _maybe(core[1], mesh, "model"))
+    if name in ("wx", "wh"):                                # recsys GRU
+        return spec(None, None)
+    # norms, biases, A_log, dt_bias, D_skip, scalars
+    return spec(*([None] * len(core)))
+
+
+def param_specs(params_shapes: Any, mesh: Mesh) -> Any:
+    """ShapeDtypeStruct pytree -> PartitionSpec pytree."""
+
+    def per_leaf(path, leaf):
+        names = _path_names(path)
+        sp = _leaf_spec(names, leaf.shape, mesh)
+        return sp
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shapes)
+
+
+def serve_param_specs(params_shapes: Any, mesh: Mesh,
+                      hbm_budget: float = 8e9) -> Any:
+    """Inference sharding (§Perf `serve_tp` variant): drop the `data`
+    (FSDP) axis from weight specs — pure tensor parallelism — when the
+    resulting per-device param bytes fit ``hbm_budget``.  Decode steps then
+    read weights locally instead of all-gathering them every token."""
+    pspecs = param_specs(params_shapes, mesh)
+
+    def drop_data(spec):
+        return P(*(None if ax == "data" else ax for ax in spec))
+
+    dropped = jax.tree.map(drop_data, pspecs,
+                           is_leaf=lambda s: isinstance(s, P))
+
+    def per_dev_bytes(shapes, specs) -> float:
+        total = 0.0
+        for leaf, spec in zip(jax.tree.leaves(shapes),
+                              jax.tree.leaves(
+                                  specs, is_leaf=lambda s: isinstance(s, P))):
+            shard = 1
+            for ax in spec:
+                if ax is None:
+                    continue
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    shard *= _axis_size(mesh, a)
+            total += leaf.size * leaf.dtype.itemsize / shard
+        return total
+
+    if per_dev_bytes(params_shapes, dropped) <= hbm_budget:
+        return dropped
+    return pspecs  # too big without FSDP (kimi-k2): keep 2-D sharding
+
+
+def stacked_specs(specs: Any, lead: int = 1) -> Any:
+    """Prepend ``lead`` replicated dims (M-slot GBA buffer over params)."""
+    return jax.tree.map(lambda s: P(*((None,) * lead), *s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def cache_specs(cache_shapes: Any, cfg: ModelConfig, mesh: Mesh,
+                batch: int) -> Any:
+    """Decode-cache PartitionSpecs.  Batch shards over (pod, data) when it
+    divides; otherwise (long_500k, B=1) the KV sequence dim shards over
+    ``data`` — sequence-parallel cache, DESIGN.md §5."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= _axis_size(mesh, a)
+    batch_ok = batch % dp_size == 0
+    bspec = dp if batch_ok else None
+    seq_axis = None if batch_ok else "data"
+
+    def per_leaf(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        stacked = 1 if "blocks" in names else 0
+        lead = (None,) * stacked
+        core = leaf.shape[stacked:]
+        if name in ("k", "v"):
+            b, L, kv, hd = core
+            kvs = _maybe(kv, mesh, "model")
+            hds = None if kvs else _maybe(hd, mesh, "model")
+            Ls = seq_axis if (seq_axis and _fits(L, mesh, "data")) else None
+            return P(*lead, bspec, Ls, kvs, hds)
+        if name == "ssm":
+            b, h, pdim, n = core
+            return P(*lead, bspec, _maybe(h, mesh, "model"), None, None)
+        if name == "conv":
+            b, w, c = core
+            return P(*lead, bspec, None, _maybe(c, mesh, "model"))
+        if name == "memory":
+            b, t, d = core
+            return P(bspec, None, None)
+        return P(*([None] * leaf.ndim))  # pos scalar etc.
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache_shapes)
+
+
+def batch_partition(mesh: Mesh, batch: int, ndim: int) -> P:
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= _axis_size(mesh, a)
+    lead = dp if batch % dp_size == 0 else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def to_named(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

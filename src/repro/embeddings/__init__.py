@@ -1,0 +1,6 @@
+from repro.embeddings.table import (EmbeddingTable, apply_sparse_grads,
+                                    hash_ids, init_table, lookup,
+                                    sparse_grads_to_dense)
+
+__all__ = ["EmbeddingTable", "apply_sparse_grads", "hash_ids", "init_table",
+           "lookup", "sparse_grads_to_dense"]

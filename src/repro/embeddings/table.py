@@ -1,0 +1,66 @@
+"""Hashing-trick embedding tables with per-ID update-step tracking.
+
+This is the JAX stand-in for DeepRec's expandable HashTables (DESIGN.md §2):
+IDs are hashed into a fixed-capacity table; each row carries the global step
+of its last update (``last_update``), which implements Algorithm 2's per-ID
+staleness decay — the embedding gradient of an ID is decayed against the
+step *that ID* last saw, not the dense-parameter step.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+# Knuth multiplicative hashing: spreads raw categorical IDs over the table.
+_HASH_MULT = jnp.uint32(2654435761)
+
+
+class EmbeddingTable(NamedTuple):
+    table: jax.Array        # (capacity, dim)
+    last_update: jax.Array  # (capacity,) int32 — global step of last update
+
+
+def init_table(key, capacity: int, dim: int, scale: float = 0.01
+               ) -> EmbeddingTable:
+    return EmbeddingTable(
+        table=jax.random.normal(key, (capacity, dim), jnp.float32) * scale,
+        last_update=jnp.zeros((capacity,), jnp.int32),
+    )
+
+
+def hash_ids(raw_ids: jax.Array, capacity: int) -> jax.Array:
+    h = (raw_ids.astype(jnp.uint32) * _HASH_MULT) >> jnp.uint32(8)
+    return (h % jnp.uint32(capacity)).astype(jnp.int32)
+
+
+def lookup(tbl: EmbeddingTable, hashed_ids: jax.Array) -> jax.Array:
+    """hashed_ids: (...,) int32 -> (..., dim)."""
+    return tbl.table[hashed_ids]
+
+
+def sparse_grads_to_dense(ids: jax.Array, rows: jax.Array, capacity: int
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Scatter (ids (N,), rows (N,D)) into a dense (capacity, D) grad and a
+    per-row occurrence count (capacity,)."""
+    ids = ids.reshape(-1)
+    rows = rows.reshape(ids.shape[0], -1)
+    dense = jnp.zeros((capacity, rows.shape[-1]), rows.dtype)
+    dense = dense.at[ids].add(rows)
+    counts = jnp.zeros((capacity,), jnp.float32).at[ids].add(1.0)
+    return dense, counts
+
+
+def apply_sparse_grads(tbl: EmbeddingTable, dense_grad: jax.Array,
+                       counts: jax.Array, lr: float, global_step: jax.Array
+                       ) -> EmbeddingTable:
+    """SGD apply of an aggregated sparse gradient; rows with counts>0 get
+    their ``last_update`` stamped to ``global_step`` (Alg. 2 line 19)."""
+    touched = counts > 0
+    new_table = tbl.table - lr * dense_grad
+    new_table = jnp.where(touched[:, None], new_table, tbl.table)
+    new_last = jnp.where(touched, global_step, tbl.last_update)
+    return EmbeddingTable(new_table, new_last.astype(jnp.int32))

@@ -1,0 +1,112 @@
+"""Pallas TPU kernels: pooled hash-embedding lookup + scatter gradient.
+
+The compute hot-spot of the paper's recommendation workloads is the sparse
+module: per-batch gather of F rows per example (forward) and the per-ID
+normalized scatter-add (backward, Alg. 2 line 23).
+
+TPU adaptation (DESIGN.md §2): instead of the PS's host-side hash lookup we
+tile the batch over the grid and keep the table in VMEM blocks (tables are
+model-axis sharded, so per-core slices are VMEM-sized for the scaled
+configs; production tables would stream rows by DMA — noted, not modeled).
+
+* forward: grid over batch blocks; each program gathers F rows per example
+  and sum-pools them: ids (Bblk, F) + table (V, D) -> out (Bblk, D).
+* backward: scatter-add with contributor counts — a single-program serial
+  kernel (scatter targets collide, so parallelizing over the grid would
+  race; the TPU-native answer is one sequential vector pass, which is also
+  how the PS applies its buffer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 256
+
+
+def _fwd_kernel(ids_ref, table_ref, out_ref):
+    """ids: (BLOCK_B, F) int32; table: (V, D); out: (BLOCK_B, D)."""
+    f = ids_ref.shape[1]
+
+    def body(j, acc):
+        rows = table_ref[ids_ref[:, j], :]         # (BLOCK_B, D) gather
+        return acc + rows.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(
+        0, f, body, jnp.zeros(out_ref.shape, jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(ids: jax.Array, table: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    """ids: (B, F) int32, table: (V, D) -> pooled (B, D)."""
+    b, f = ids.shape
+    v, d = table.shape
+    pad = (-b) % BLOCK_B
+    if pad:
+        ids = jnp.pad(ids, ((0, pad), (0, 0)))
+    bp = b + pad
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(bp // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, f), lambda i: (i, 0)),
+            pl.BlockSpec((v, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d), table.dtype),
+        interpret=interpret,
+    )(ids, table)
+    return out[:b]
+
+
+def _bwd_kernel(ids_ref, gout_ref, gtable_ref, counts_ref):
+    """Serial scatter-add: grad_out (B, D), ids (B, F) ->
+    grad_table (V, D), counts (V,)."""
+    b, f = ids_ref.shape
+    gtable_ref[...] = jnp.zeros_like(gtable_ref)
+    counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    def body(i, _):
+        bi = i // f
+        fi = i % f
+        idx = ids_ref[bi, fi]
+        row = gout_ref[bi, :].astype(jnp.float32)
+        gtable_ref[idx, :] += row.astype(gtable_ref.dtype)
+        counts_ref[idx] += jnp.float32(1.0)
+        return 0
+
+    jax.lax.fori_loop(0, b * f, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def embedding_bag_grad(ids: jax.Array, grad_out: jax.Array, capacity: int,
+                       *, interpret: bool = True
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Scatter grads back to rows with per-ID contributor counts.
+
+    ids: (B, F); grad_out: (B, D) -> (grad_table (V, D), counts (V,))."""
+    b, f = ids.shape
+    d = grad_out.shape[1]
+    gtable, counts = pl.pallas_call(
+        _bwd_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, f), lambda i: (0, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((capacity, d), lambda i: (0, 0)),
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity, d), jnp.float32),
+            jax.ShapeDtypeStruct((capacity,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids, grad_out)
+    return gtable, counts

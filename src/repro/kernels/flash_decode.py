@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: blocked decode attention (beyond-paper).
+
+One new token attends to a long KV cache (decode_32k / long_500k shapes).
+The naive XLA lowering materializes the full (H, L) score row in f32 and
+reads it three times (max, exp-sum, weighted sum).  This kernel streams the
+cache in (BLOCK_L) chunks with an online-softmax accumulator held in VMEM
+scratch — one HBM pass over K and V, which is the roofline for decode.
+
+Grid: (B, L/BLOCK_L); the L dimension is sequential ("arbitrary") so the
+scratch accumulators carry across cache blocks; batch is parallel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_L = 512
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, blk: int):
+    j = pl.program_id(1)
+    nblk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (KV, G, hd)
+    k = k_ref[0].astype(jnp.float32)            # (BLK, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    hd = q.shape[-1]
+    scores = jnp.einsum("ngh,lnh->ngl", q, k) / math.sqrt(hd)
+    # causal/validity mask: absolute cache index <= pos
+    idx = j * blk + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 2)
+    scores = jnp.where(idx <= pos_ref[0], scores, -1e30)
+
+    m_prev = m_ref[...]                          # (KV, G)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[..., None])       # (KV, G, BLK)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                    + jnp.einsum("ngl,lnh->ngh", p, v))
+    m_ref[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / l_ref[...][..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+                 *, interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, hd) one-token queries grouped by kv head;
+    k/v: (B, L, KV, hd) cache; pos: scalar int32 (last valid index).
+    Returns (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    L = k.shape[1]
+    blk = min(BLOCK_L, L)
+    assert L % blk == 0
+    grid = (B, L // blk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, blk=blk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, KV, G, hd), lambda b, j, *_: (b, 0, 0, 0)),
+                pl.BlockSpec((1, blk, KV, hd), lambda b, j, *_: (b, j, 0, 0)),
+                pl.BlockSpec((1, blk, KV, hd), lambda b, j, *_: (b, j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, KV, G, hd),
+                                   lambda b, j, *_: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((KV, G), jnp.float32),       # running max
+                pltpu.VMEM((KV, G), jnp.float32),       # running sum
+                pltpu.VMEM((KV, G, hd), jnp.float32),   # output accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k, v)
+    return out

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused Adagrad update.
+
+Adagrad is the paper's optimizer for the async/GBA modes (Tab. 5.1).  The
+naive XLA form reads grad, reads accum, writes accum, reads accum again,
+writes param — this kernel does one VMEM pass per block: accum += g^2;
+param -= lr * g / (sqrt(accum) + eps), with both outputs aliased in-place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _kernel(lr_ref, param_ref, grad_ref, accum_ref, new_param_ref,
+            new_accum_ref, *, eps: float):
+    g = grad_ref[...].astype(jnp.float32)
+    a = accum_ref[...].astype(jnp.float32) + g * g
+    p = param_ref[...].astype(jnp.float32)
+    p = p - lr_ref[0] * g / (jnp.sqrt(a) + eps)
+    new_param_ref[...] = p.astype(new_param_ref.dtype)
+    new_accum_ref[...] = a
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def fused_adagrad(param: jax.Array, grad: jax.Array, accum: jax.Array,
+                  lr: jax.Array, *, eps: float = 1e-10,
+                  interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """1-D fused update.  param/grad/accum: (N,) -> (new_param, new_accum)."""
+    n = param.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        param = jnp.pad(param, (0, pad))
+        grad = jnp.pad(grad, (0, pad))
+        accum = jnp.pad(accum, (0, pad))
+    np_ = n + pad
+    grid = (np_ // BLOCK,)
+    new_param, new_accum = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), param.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(lr, jnp.float32).reshape(1), param, grad, accum)
+    return new_param[:n], new_accum[:n]

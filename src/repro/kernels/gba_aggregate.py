@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused staleness-decay gradient aggregation.
+
+The PS-side hot loop of GBA (Alg. 2 lines 20/22): given the M-slot gradient
+buffer ``(M, D)``, the slot tokens ``(M,)`` and the current global step,
+compute ``sum_m f(token_m, k) * g_m / M`` — decay mask, weighting and
+reduction in one VMEM pass instead of XLA's mask -> broadcast-mul -> reduce
+chain (3x HBM traffic on the buffer).
+
+TPU adaptation: the buffer is tiled along D into ``(M, BLOCK_D)`` VMEM
+blocks (M is small — 8..100 — so a full buffer column always fits VMEM);
+tokens ride in SMEM via ``PrefetchScalarGridSpec`` so the mask is computed
+on the scalar core before the vector pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_D = 2048
+
+
+def _kernel(tokens_ref, step_ref, iota_ref, grads_ref, out_ref):
+    """grads_ref: (M, BLOCK_D) VMEM block; tokens/step/iota in SMEM."""
+    m = grads_ref.shape[0]
+    tokens = tokens_ref[...]                       # (M,) int32
+    step = step_ref[0]
+    iota = iota_ref[0]
+    keep = (step - tokens) <= iota                 # Eq. (1)
+    w = keep.astype(jnp.float32) / jnp.float32(m)
+    g = grads_ref[...].astype(jnp.float32)         # (M, BLOCK_D)
+    out_ref[...] = jnp.sum(g * w[:, None], axis=0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("iota", "interpret"))
+def gba_aggregate(grads: jax.Array, tokens: jax.Array, step: jax.Array,
+                  *, iota: int, interpret: bool = True) -> jax.Array:
+    """grads: (M, D) -> (D,) decayed mean.  ``interpret=True`` runs the
+    kernel body on CPU (this container); pass False on real TPUs."""
+    m, d = grads.shape
+    pad = (-d) % BLOCK_D
+    if pad:
+        grads = jnp.pad(grads, ((0, 0), (0, pad)))
+    d_pad = d + pad
+    grid = (d_pad // BLOCK_D,)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[pl.BlockSpec((m, BLOCK_D), lambda i, *_: (0, i))],
+            out_specs=pl.BlockSpec((BLOCK_D,), lambda i, *_: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((d_pad,), grads.dtype),
+        interpret=interpret,
+    )(tokens.astype(jnp.int32),
+      jnp.asarray(step, jnp.int32).reshape(1),
+      jnp.full((1,), iota, jnp.int32),
+      grads)
+    return out[:d]

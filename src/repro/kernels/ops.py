@@ -1,0 +1,63 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to CPU-interpret mode in this container; on real
+TPUs call ``set_interpret(False)`` once at startup (launch scripts do).
+The tree-level helpers apply the kernels across parameter pytrees.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_grad
+from repro.kernels.fused_adagrad import fused_adagrad
+from repro.kernels.gba_aggregate import gba_aggregate
+
+_INTERPRET = True
+
+
+def set_interpret(value: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = value
+
+
+def gba_aggregate_tree(grads_stacked: Any, tokens: jax.Array,
+                       step: jax.Array, *, iota: int) -> Any:
+    """Kernel-backed version of repro.core.gba.aggregate_dense: flattens
+    each leaf to (M, -1), runs the fused kernel, restores shapes."""
+
+    def per_leaf(g):
+        m = g.shape[0]
+        flat = g.reshape(m, -1)
+        out = gba_aggregate(flat, tokens, step, iota=iota,
+                            interpret=_INTERPRET)
+        return out.reshape(g.shape[1:])
+
+    return jax.tree.map(per_leaf, grads_stacked)
+
+
+def adagrad_apply_tree(params: Any, grads: Any, accums: Any, lr
+                       ) -> tuple[Any, Any]:
+    """Fused Adagrad over a pytree (flattening each leaf to 1-D)."""
+
+    def per_leaf(p, g, a):
+        np_, na = fused_adagrad(p.reshape(-1), g.reshape(-1), a.reshape(-1),
+                                lr, interpret=_INTERPRET)
+        return np_.reshape(p.shape), na.reshape(a.shape)
+
+    out = jax.tree.map(per_leaf, params, grads, accums)
+    is2 = lambda t: isinstance(t, tuple)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is2)
+    new_a = jax.tree.map(lambda t: t[1], out, is_leaf=is2)
+    return new_p, new_a
+
+
+def pooled_lookup(ids: jax.Array, table: jax.Array) -> jax.Array:
+    return embedding_bag(ids, table, interpret=_INTERPRET)
+
+
+def pooled_lookup_grad(ids: jax.Array, grad_out: jax.Array, capacity: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    return embedding_bag_grad(ids, grad_out, capacity, interpret=_INTERPRET)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gba_aggregate_ref(grads: jax.Array, tokens: jax.Array, step: jax.Array,
+                      *, iota: int) -> jax.Array:
+    """(M, D), (M,) -> (D,): Eq. (1) decayed mean over the buffer."""
+    m = grads.shape[0]
+    keep = ((step - tokens) <= iota).astype(jnp.float32)
+    g = grads.astype(jnp.float32)
+    return (jnp.sum(g * keep[:, None], axis=0) / m).astype(grads.dtype)
+
+
+def embedding_bag_ref(ids: jax.Array, table: jax.Array) -> jax.Array:
+    """(B, F), (V, D) -> (B, D) sum-pool of gathered rows."""
+    return jnp.sum(table[ids].astype(jnp.float32), axis=1).astype(table.dtype)
+
+
+def embedding_bag_grad_ref(ids: jax.Array, grad_out: jax.Array,
+                           capacity: int) -> tuple[jax.Array, jax.Array]:
+    b, f = ids.shape
+    d = grad_out.shape[1]
+    rows = jnp.broadcast_to(grad_out[:, None, :], (b, f, d)).reshape(-1, d)
+    flat = ids.reshape(-1)
+    gtable = jnp.zeros((capacity, d), jnp.float32).at[flat].add(
+        rows.astype(jnp.float32))
+    counts = jnp.zeros((capacity,), jnp.float32).at[flat].add(1.0)
+    return gtable, counts
+
+
+def fused_adagrad_ref(param: jax.Array, grad: jax.Array, accum: jax.Array,
+                      lr, *, eps: float = 1e-10
+                      ) -> tuple[jax.Array, jax.Array]:
+    g = grad.astype(jnp.float32)
+    a = accum.astype(jnp.float32) + g * g
+    p = param.astype(jnp.float32) - lr * g / (jnp.sqrt(a) + eps)
+    return p.astype(param.dtype), a

@@ -1,0 +1,192 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices stand in for 2 TPU v5e pods; ``.lower().compile()`` must succeed
+and we record memory_analysis / cost_analysis / collective bytes for the
+roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+"""
+# The XLA flag MUST precede any other import (jax locks device count on
+# first init) — see task spec.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.launch.steps import build_step                     # noqa: E402
+from repro.launch.variants import VARIANTS                    # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,512]' -> bytes.  Tuple shapes handled by summing parts."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op in the (SPMD) HLO."""
+    out: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # ops look like:  %name = f32[..]{..} all-reduce(...), or
+        #                 ROOT %x = (f32[..], ..) all-gather-start(...)
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b(all-gather|all-reduce|reduce-scatter|"
+                        r"all-to-all|collective-permute)(?:-start)?\(", rhs)
+        if not opm:
+            continue
+        # -done ops would double count; they carry the same bytes as -start
+        if re.search(r"\b[a-z-]+-done\(", rhs):
+            continue
+        shape_part = rhs[:opm.start()]
+        out[opm.group(1)] += _shape_bytes(shape_part)
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               verbose: bool = True, variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "kind": shape.kind, "variant": variant}
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention architecture; 500k decode "
+                        "requires sub-quadratic/windowed attention "
+                        "(DESIGN.md §4)")
+        return rec
+    cfg, opts = VARIANTS[variant](cfg, {})
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = build_step(cfg, shape, mesh, **opts)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collective_bytes": coll,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes":
+                    getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+        })
+        if verbose:
+            print(f"[ok] {arch} x {shape_name} x {rec['mesh']} "
+                  f"[{variant}]: "
+                  f"flops={rec['flops']:.3e} "
+                  f"bytes={rec['bytes_accessed']:.3e} "
+                  f"coll={sum(coll.values()):.3e} "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+            print(f"     memory: {rec['memory']}", flush=True)
+    except Exception as e:  # a failure here is a bug in our sharding
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {rec['mesh']}", flush=True)
+            traceback.print_exc()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=tuple(VARIANTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run expects 512 host devices"
+
+    keyof = lambda r: (r["arch"], r["shape"], r["mesh"],
+                   r.get("variant", "baseline"))
+    merged: dict = {}
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            merged = {keyof(r): r for r in json.load(f)}
+
+    def save(rec):
+        merged[keyof(rec)] = rec
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(list(merged.values()), f, indent=1)
+
+    records = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in INPUT_SHAPES:
+                for mp in (False, True):
+                    key = (arch, shape_name,
+                           "2x16x16" if mp else "16x16", "baseline")
+                    prev = merged.get(key)
+                    if prev and prev.get("status") in ("ok", "skipped"):
+                        records.append(prev)   # resume support
+                        continue
+                    rec = dryrun_one(arch, shape_name, mp)
+                    records.append(rec)
+                    save(rec)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        rec = dryrun_one(args.arch, args.shape, args.multi_pod,
+                         variant=args.variant)
+        records.append(rec)
+        save(rec)
+    ok = sum(r["status"] == "ok" for r in records)
+    sk = sum(r["status"] == "skipped" for r in records)
+    fl = sum(r["status"] == "failed" for r in records)
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {fl} FAILED")
+    if fl:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production meshes (TPU v5e class).
+
+Defined as functions, not module-level constants, so importing this module
+never touches jax device state — the dry-run sets
+``xla_force_host_platform_device_count=512`` before the first mesh build,
+while tests/benches see the 1-device smoke mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh() -> Mesh:
+    """1-device mesh with production axis names, for CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# v5e-class hardware constants used by the roofline analysis (task spec)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~4 links/chip usable)

@@ -1,0 +1,71 @@
+"""Serving launcher: batched prefill + decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
+        --reduced --batch 8 --prompt-len 32 --gen-len 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.steps import make_decode_step
+from repro.models import transformer as T
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        mesh = make_smoke_mesh()
+    else:
+        mesh = make_production_mesh()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    memory = None
+    if cfg.family == "vlm":
+        memory = jax.random.normal(
+            key, (args.batch, cfg.num_image_tokens, cfg.d_model),
+            jnp.float32).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        frames = jax.random.normal(
+            key, (args.batch, cfg.encoder_frames, cfg.d_model),
+            jnp.float32).astype(jnp.dtype(cfg.dtype))
+        memory = T.encode_audio(params, cfg, frames)
+
+    cache_len = args.prompt_len + args.gen_len
+    with mesh:
+        t0 = time.perf_counter()
+        logits, cache = jax.jit(
+            lambda p, t: T.prefill(p, cfg, t, memory=memory,
+                                   cache_len=cache_len))(params, prompts)
+        jax.block_until_ready(logits)
+        print(f"prefill {args.batch}x{args.prompt_len}: "
+              f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
+        decode = jax.jit(make_decode_step(cfg))
+        token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        t0 = time.perf_counter()
+        for _ in range(args.gen_len - 1):
+            token, _, cache = decode(params, token, cache)
+        jax.block_until_ready(token)
+        dt = time.perf_counter() - t0
+        print(f"decode {args.gen_len - 1} steps: {dt * 1e3:.0f} ms "
+              f"({args.batch * (args.gen_len - 1) / dt:,.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""Sharded train / prefill / decode steps + input_specs for every
+(architecture x input-shape) combination.
+
+GBA is a first-class feature of the compiled train step: each step computes
+one buffer slot's gradient (the pod acts as one PS "worker"; the slot's
+local batch is the input-shape global batch), decays it by the token-control
+rule against the current global step, accumulates into the sharded gradient
+accumulator, and applies the optimizer every M-th microstep under
+``lax.cond`` — the TPU-SPMD rendering of Algorithm 2's buffer (DESIGN.md
+§2).  Setting ``buffer_size=1, iota=big`` recovers plain synchronous
+training, which is exactly the paper's tuning-free switch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GBAConfig, InputShape, ModelConfig
+from repro.core.staleness import threshold_decay
+from repro.distributed import sharding as S
+from repro.distributed.act_sharding import set_act_spec, set_expert_spec
+from repro.models import transformer as T
+from repro.optim import Optimizer, get_optimizer
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (deliverable f): ShapeDtypeStruct stand-ins, no allocation
+# ---------------------------------------------------------------------------
+
+def model_inputs(cfg: ModelConfig, shape: InputShape) -> dict[str, SDS]:
+    """Abstract model inputs for one input shape.  Modality frontends are
+    stubs per the carve-out: VLM/audio entries carry precomputed patch /
+    frame embeddings of the right shape."""
+    B = shape.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        out = {"tokens": SDS((B, shape.seq_len), jnp.int32),
+               "labels": SDS((B, shape.seq_len), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": SDS((B, shape.seq_len), jnp.int32)}
+    else:  # decode: ONE new token against a cache of seq_len
+        # frontend embeddings live in the cache ("memory"), not the batch
+        return {"tokens": SDS((B, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = SDS((B, cfg.num_image_tokens, cfg.d_model), dt)
+    if cfg.family == "audio":
+        out["frames"] = SDS((B, cfg.encoder_frames, cfg.d_model), dt)
+    return out
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        functools.partial(T.init_model, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                   memory_len: int = 0) -> Any:
+    mem = (SDS((batch, memory_len, cfg.d_model), jnp.dtype(cfg.dtype))
+           if memory_len else None)
+
+    def build(m):
+        return T.init_cache(cfg, batch, cache_len, memory=m)
+
+    return jax.eval_shape(build, mem) if mem is not None else \
+        jax.eval_shape(lambda: T.init_cache(cfg, batch, cache_len))
+
+
+def _memory_len(cfg: ModelConfig) -> int:
+    if cfg.family == "vlm":
+        return cfg.num_image_tokens
+    if cfg.family == "audio":
+        return cfg.encoder_frames
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# train step with first-class GBA
+# ---------------------------------------------------------------------------
+
+def _loss_from_batch(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    memory = batch.get("image_embeds")
+    if "frames" in batch:
+        memory = T.encode_audio(params, cfg, batch["frames"])
+    return T.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                     memory=memory)
+
+
+def init_train_state(params: Any, optimizer: Optimizer,
+                     acc_dtype=jnp.float32) -> dict:
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "acc": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params),
+        "micro": jnp.zeros((), jnp.int32),
+        "gstep": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    gba: GBAConfig):
+    """Returns train_step(state, batch, token) -> (state, loss)."""
+    m = gba.buffer_size
+    iota = gba.staleness_tolerance
+
+    def train_step(state, batch, token):
+        loss, grads = jax.value_and_grad(_loss_from_batch)(
+            state["params"], cfg, batch)
+        # token-control decay at the step this slot lands in (Eq. 1)
+        w = threshold_decay(token[None], state["gstep"], iota)[0]
+        acc = jax.tree.map(
+            lambda a, g: a + (g.astype(a.dtype) * (w / m).astype(a.dtype)),
+            state["acc"], grads)
+        micro = state["micro"] + 1
+        is_full = (micro % m) == 0
+
+        def apply(operands):
+            params, opt, acc = operands
+            params, opt = optimizer.update(params, acc, opt)
+            zeros = jax.tree.map(jnp.zeros_like, acc)
+            return params, opt, zeros
+
+        def noop(operands):
+            return operands
+
+        params, opt, acc = jax.lax.cond(
+            is_full, apply, noop, (state["params"], state["opt"], acc))
+        new_state = {"params": params, "opt": opt, "acc": acc,
+                     "micro": micro,
+                     "gstep": state["gstep"] + is_full.astype(jnp.int32)}
+        return new_state, loss
+
+    return train_step
+
+
+def opt_state_specs(optimizer: Optimizer, pspecs: Any) -> Any:
+    if optimizer.name == "adam":
+        return {"m": pspecs, "v": pspecs, "count": P()}
+    if optimizer.name == "adagrad":
+        return {"accum": pspecs}
+    return {}
+
+
+def train_state_specs(optimizer: Optimizer, pspecs: Any) -> dict:
+    return {
+        "params": pspecs,
+        "opt": opt_state_specs(optimizer, pspecs),
+        "acc": pspecs,
+        "micro": P(),
+        "gstep": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        memory = batch.get("image_embeds")
+        if "frames" in batch:
+            memory = T.encode_audio(params, cfg, batch["frames"])
+        return T.prefill(params, cfg, batch["tokens"], memory=memory)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache):
+        logits, cache = T.decode_step(params, cfg, token, cache)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# jit assembly per (arch x shape x mesh)
+# ---------------------------------------------------------------------------
+
+# the paper's GBA mode runs Adam (Tab. 5.1, "Others"); the 1T MoE cannot hold
+# Adam's two f32 moments at 512 chips, so it trains with Adagrad — the very
+# optimizer the paper uses for its async mode (DESIGN.md §5)
+ARCH_OPTIMIZER = {"kimi-k2-1t-a32b": "adagrad"}
+ARCH_ACC_DTYPE = {"kimi-k2-1t-a32b": jnp.bfloat16}
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               gba: GBAConfig | None = None, serve_tp: bool = False,
+               moe_ep: bool = False):
+    """Returns (jitted_fn, abstract_args tuple) ready for .lower()."""
+    gba = gba or GBAConfig(local_batch=shape.global_batch, buffer_size=8)
+    if moe_ep and cfg.num_experts \
+            and cfg.num_experts % mesh.shape["model"] == 0:
+        set_expert_spec(NamedSharding(mesh, P("model", None, None)))
+    else:
+        set_expert_spec(None)
+    # pin the residual stream to batch-sharded layout (act_sharding docs);
+    # long_500k (batch=1) replicates instead
+    dp = S.data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    act_spec = P(dp, None, None) if shape.global_batch % dp_size == 0 \
+        else P(None, None, None)
+    set_act_spec(NamedSharding(mesh, act_spec))
+    pshapes = abstract_params(cfg)
+    if serve_tp and shape.kind != "train":
+        pspecs = S.serve_param_specs(pshapes, mesh)
+    else:
+        pspecs = S.param_specs(pshapes, mesh)
+    named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+    binputs = model_inputs(cfg, shape)
+    bspecs = {k: S.batch_partition(mesh, v.shape[0], v.ndim)
+              for k, v in binputs.items()}
+
+    if shape.kind == "train":
+        opt = get_optimizer(ARCH_OPTIMIZER.get(cfg.name, "adam"), 1e-3)
+        acc_dt = ARCH_ACC_DTYPE.get(cfg.name, jnp.float32)
+        sspecs = train_state_specs(opt, pspecs)
+        state_sds = jax.eval_shape(
+            functools.partial(init_train_state, optimizer=opt,
+                              acc_dtype=acc_dt), pshapes)
+        fn = jax.jit(make_train_step(cfg, opt, gba),
+                     in_shardings=(named(sspecs), named(bspecs),
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(named(sspecs), None))
+        return fn, (state_sds, binputs, SDS((), jnp.int32))
+
+    if shape.kind == "prefill":
+        cache_sds = abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                                   _memory_len(cfg))
+        cspecs = S.cache_specs(cache_sds, cfg, mesh, shape.global_batch)
+        fn = jax.jit(make_prefill_step(cfg),
+                     in_shardings=(named(pspecs), named(bspecs)),
+                     out_shardings=(None, named(cspecs)))
+        return fn, (pshapes, binputs)
+
+    # decode
+    mem_len = _memory_len(cfg)
+    cache_sds = abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                               mem_len)
+    cspecs = S.cache_specs(cache_sds, cfg, mesh, shape.global_batch)
+    tok_sds = binputs["tokens"]
+    fn = jax.jit(make_decode_step(cfg),
+                 in_shardings=(named(pspecs), named(bspecs["tokens"]),
+                               named(cspecs)),
+                 out_shardings=(named(bspecs["tokens"]), None,
+                                named(cspecs)))
+    return fn, (pshapes, tok_sds, cache_sds)

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --steps 20 --reduced [--buffer 8] [--iota 4]
+
+On real TPU hardware this launches the sharded GBA train step on the
+production mesh; in this CPU container use ``--reduced`` (smoke variant,
+1-device mesh) — the full configs are exercised by launch.dryrun.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import GBAConfig
+from repro.data import make_lm_stream
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.steps import (ARCH_OPTIMIZER, init_train_state,
+                                make_train_step)
+from repro.models import transformer as T
+from repro.optim import get_optimizer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--buffer", type=int, default=4, help="GBA M")
+    ap.add_argument("--iota", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke variant on the 1-device mesh (CPU)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        mesh = make_smoke_mesh()
+    else:
+        mesh = make_production_mesh()
+
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    print(f"{cfg.name}: {T.param_count(params) / 1e6:.1f}M params, "
+          f"mesh {dict(mesh.shape)}")
+    opt = get_optimizer(ARCH_OPTIMIZER.get(cfg.name, "adam"), args.lr)
+    gba = GBAConfig(local_batch=args.batch, buffer_size=args.buffer,
+                    staleness_tolerance=args.iota)
+    stream = make_lm_stream(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+    with mesh:
+        step_fn = jax.jit(make_train_step(cfg, opt, gba), donate_argnums=0)
+        state = init_train_state(params, opt)
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            b = stream.batch(i)
+            batch = {"tokens": jnp.asarray(b["tokens"]),
+                     "labels": jnp.asarray(b["labels"])}
+            if cfg.family == "vlm":
+                batch["image_embeds"] = jnp.zeros(
+                    (args.batch, cfg.num_image_tokens, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+            if cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (args.batch, cfg.encoder_frames, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+            token = jnp.asarray(i // args.buffer, jnp.int32)
+            state, loss = step_fn(state, batch, token)
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {float(loss):.4f}  "
+                      f"gstep {int(state['gstep'])}  "
+                      f"{(i + 1) * args.batch * args.seq /  (time.perf_counter() - t0):,.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

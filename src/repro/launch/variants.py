@@ -1,0 +1,96 @@
+"""Named perf variants for the §Perf hillclimb (EXPERIMENTS.md).
+
+Each variant transforms (cfg, build options) before build_step; the dry-run
+records the variant name so baseline vs optimized roofline terms can be
+diffed.  ``baseline`` is the paper-faithful configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig
+
+Transform = Callable[[ModelConfig, dict], tuple[ModelConfig, dict]]
+
+
+def _baseline(cfg, opts):
+    return cfg, opts
+
+
+def _chunked_attn(cfg, opts):
+    """Flash-style query chunking + remat: kills the (S,S) score temp."""
+    return dataclasses.replace(cfg, attn_q_chunk=1024), opts
+
+
+def _chunked_attn_512(cfg, opts):
+    return dataclasses.replace(cfg, attn_q_chunk=512), opts
+
+
+def _chunked_attn_2048(cfg, opts):
+    return dataclasses.replace(cfg, attn_q_chunk=2048), opts
+
+
+def _serve_tp(cfg, opts):
+    """Inference sharding: replicate weights over `data` (pure TP) so
+    decode doesn't all-gather FSDP-sharded params every token."""
+    return cfg, {**opts, "serve_tp": True}
+
+
+def _moe_capacity_1(cfg, opts):
+    """Tighter MoE capacity factor: less dispatch padding traffic."""
+    if cfg.num_experts:
+        return dataclasses.replace(cfg, moe_capacity_factor=1.0), opts
+    return cfg, opts
+
+
+def _gba_m16(cfg, opts):
+    from repro.configs.base import GBAConfig
+    return cfg, {**opts, "gba": GBAConfig(local_batch=0, buffer_size=16)}
+
+
+def _remat(cfg, opts):
+    """Checkpoint each scanned block: backward recomputes the block instead
+    of reading saved activations -> temp ~ 1 block instead of all."""
+    return dataclasses.replace(cfg, remat_blocks=True), opts
+
+
+def _chunked_loss(cfg, opts):
+    """Seq-chunked CE: never materialize (B, S, V) f32 logits."""
+    return dataclasses.replace(cfg, loss_seq_chunk=512), opts
+
+
+def _full_opt(cfg, opts):
+    """All memory optimizations together (the §Perf optimized config)."""
+    return _chunked_loss(*_remat(*_chunked_attn(cfg, opts)))
+
+
+def _mamba_split(cfg, opts):
+    """Shard-aligned per-stream projections instead of the fused in_proj."""
+    return dataclasses.replace(cfg, mamba_split_proj=True), opts
+
+
+def _moe_ep(cfg, opts):
+    """Expert-parallel constraints on the dispatch buffers (H3)."""
+    return cfg, {**opts, "moe_ep": True}
+
+
+VARIANTS: dict[str, Transform] = {
+    "moe_ep": _moe_ep,
+    "moe_ep_full": lambda c, o: _moe_ep(*_full_opt(c, o)),
+    "mamba_split": _mamba_split,
+    "mamba_split_remat": lambda c, o: _remat(*_mamba_split(c, o)),
+    "remat": _remat,
+    "chunked_remat": lambda c, o: _remat(*_chunked_attn(c, o)),
+    "chunked_loss": _chunked_loss,
+    "full_opt": _full_opt,
+    "full_opt_moecap1": lambda c, o: _moe_capacity_1(*_full_opt(c, o)),
+    "baseline": _baseline,
+    "chunked_attn": _chunked_attn,
+    "chunked_attn_512": _chunked_attn_512,
+    "chunked_attn_2048": _chunked_attn_2048,
+    "serve_tp": _serve_tp,
+    "serve_tp_chunked": lambda c, o: _serve_tp(*_chunked_attn(c, o)),
+    "moe_cap1": _moe_capacity_1,
+    "moe_cap1_chunked": lambda c, o: _moe_capacity_1(*_chunked_attn(c, o)),
+}

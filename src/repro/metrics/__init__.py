@@ -1,0 +1,3 @@
+from repro.metrics.auc import auc, StreamingAUC
+
+__all__ = ["auc", "StreamingAUC"]

@@ -1,0 +1,3 @@
+from repro.models import layers, recsys, transformer
+
+__all__ = ["layers", "recsys", "transformer"]

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, adagrad, adam, get_optimizer,
+                                    sgd)
+
+__all__ = ["Optimizer", "adagrad", "adam", "get_optimizer", "sgd"]

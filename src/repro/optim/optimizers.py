@@ -1,0 +1,124 @@
+"""Native JAX optimizers (optax-free): SGD, Adagrad, Adam.
+
+The paper trains the async/GBA modes with Adagrad and the sync mode with
+Adam (Tab. 5.1); both are first-class here.  Functional interface:
+
+    opt = adam(lr=6e-4)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state)
+
+``update`` is jittable; ``lr`` may be overridden per call for schedules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+State = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], State]
+    update: Callable[..., tuple[Params, State]]
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mom": jax.tree.map(jnp.zeros_like, params)}
+        return {}
+
+    def update(params, grads, state, lr_override=None):
+        step_lr = lr if lr_override is None else lr_override
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g,
+                               state["mom"], grads)
+            params = jax.tree.map(lambda p, m: p - step_lr * m, params, mom)
+            return params, {"mom": mom}
+        params = jax.tree.map(lambda p, g: (p - step_lr * g).astype(p.dtype),
+                              params, grads)
+        return params, state
+
+    return Optimizer("sgd", init, update)
+
+
+def adagrad(lr: float, eps: float = 1e-10, initial_accum: float = 0.1
+            ) -> Optimizer:
+    def init(params):
+        return {"accum": jax.tree.map(
+            lambda p: jnp.full(p.shape, initial_accum, jnp.float32), params)}
+
+    def update(params, grads, state, lr_override=None):
+        step_lr = lr if lr_override is None else lr_override
+
+        def upd(p, g, a):
+            gf = g.astype(jnp.float32)
+            a = a + jnp.square(gf)
+            new_p = p.astype(jnp.float32) - step_lr * gf / (jnp.sqrt(a) + eps)
+            return new_p.astype(p.dtype), a
+
+        flat = jax.tree.map(upd, params, grads, state["accum"])
+        params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        accum = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return params, {"accum": accum}
+
+    return Optimizer("adagrad", init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(params, grads, state, lr_override=None):
+        step_lr = lr if lr_override is None else lr_override
+        count = state["count"] + 1
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            step = step_lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + step_lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        is3 = lambda t: isinstance(t, tuple)
+        params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+        m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+        v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+        return params, {"m": m, "v": v, "count": count}
+
+    return Optimizer("adam", init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "adagrad": adagrad, "adam": adam}[name](lr, **kw)

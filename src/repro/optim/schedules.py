@@ -1,0 +1,55 @@
+"""Learning-rate schedules (jittable step -> lr functions).
+
+GBA's tuning-free contract means the schedule follows *global steps* —
+which the buffer keeps aligned across modes (K = ceil(Q/M) steps per day
+regardless of worker count), so a schedule tuned under sync stays valid
+after switching.  ``Optimizer.update(..., lr_override=schedule(step))``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps)
+                            / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(math.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def inverse_sqrt(peak_lr: float, warmup_steps: int) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay = peak_lr * jnp.sqrt(warmup_steps / jnp.maximum(
+            step, warmup_steps))
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return fn
+
+
+def step_decay(lr: float, boundaries: tuple[int, ...],
+               factors: tuple[float, ...]) -> Schedule:
+    def fn(step):
+        out = jnp.asarray(lr, jnp.float32)
+        for b, f in zip(boundaries, factors):
+            out = jnp.where(jnp.asarray(step) >= b, lr * f, out)
+        return out
+
+    return fn

@@ -1,0 +1,4 @@
+from repro.sim.cluster import (ClusterSpec, Schedule, SimMetrics, Slot,
+                               simulate)
+
+__all__ = ["ClusterSpec", "Schedule", "SimMetrics", "Slot", "simulate"]

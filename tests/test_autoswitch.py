@@ -1,0 +1,60 @@
+"""Adaptive switching controller (beyond-paper, paper §6 future work)."""
+import numpy as np
+
+from repro.core.autoswitch import AutoSwitchController
+from repro.sim.cluster import ClusterSpec, simulate
+
+
+def test_speedup_estimate_homogeneous():
+    c = AutoSwitchController()
+    # all workers equal: sync loses nothing -> speedup ~1
+    assert abs(c.estimate_speedup(np.full(16, 100.0)) - 1.0) < 1e-9
+
+
+def test_speedup_estimate_straggler():
+    c = AutoSwitchController()
+    rates = np.array([100.0] * 15 + [10.0])
+    s = c.estimate_speedup(rates)
+    # sync paced by the 10-sample/s worker: 16*10=160 vs sum=1510
+    assert abs(s - 1510.0 / 160.0) < 1e-9
+
+
+def test_hysteresis():
+    c = AutoSwitchController(switch_up=1.5, switch_down=1.15)
+    assert c.mode == "sync"
+    assert c.decide(np.array([100.0] * 15 + [20.0])) == "gba"   # 5.2x
+    # mild heterogeneity (1.25x) sits inside the hysteresis band
+    assert c.decide(np.array([100.0] * 15 + [80.0])) == "gba"
+    assert c.decide(np.full(16, 100.0)) == "sync"               # 1.0x
+
+
+def test_controller_tracks_cluster_state():
+    vac = ClusterSpec(num_workers=8, straggler_frac=0.0, jitter=0.05,
+                      ps_throughput=100.0, seed=1)
+    strained = ClusterSpec(num_workers=8, straggler_frac=0.5,
+                           straggler_slowdown=10.0, jitter=0.1,
+                           ps_throughput=100.0, seed=1)
+    c = AutoSwitchController()
+    r_vac = simulate(vac, "sync", 64, 128).metrics.worker_rates
+    assert c.decide(r_vac) == "sync"
+    r_str = simulate(strained, "sync", 64, 128).metrics.worker_rates
+    assert c.decide(r_str) == "gba"
+    r_vac2 = simulate(vac, "gba", 64, 128, buffer_size=8,
+                      iota=4).metrics.worker_rates
+    assert c.decide(r_vac2) == "sync"
+
+
+def test_ps_throughput_cap_crossover():
+    """Fig. 1: finite PS -> sync wins vacant, GBA wins strained."""
+    vac = ClusterSpec(num_workers=16, straggler_frac=0.0, jitter=0.05,
+                      ps_throughput=100.0, seed=3)
+    strained = ClusterSpec(num_workers=16, straggler_frac=0.25,
+                           straggler_slowdown=10.0, jitter=0.2,
+                           time_varying=True, ps_throughput=100.0, seed=3)
+    q = {}
+    for name, spec in [("vac", vac), ("str", strained)]:
+        for mode in ("sync", "gba"):
+            q[(name, mode)] = simulate(spec, mode, 480, 256, buffer_size=16,
+                                       iota=4).metrics.qps
+    assert q[("vac", "sync")] > q[("vac", "gba")]
+    assert q[("str", "gba")] > 2.0 * q[("str", "sync")]

@@ -1,0 +1,77 @@
+"""Config registry: all 10 assigned architectures resolve, patterns divide,
+reduced variants obey the smoke-test contract."""
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, all_configs, get_config
+
+EXPECTED = {
+    "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                            num_kv_heads=8, d_ff=2048, vocab_size=163840,
+                            num_experts=384, experts_per_token=8),
+    "granite-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                       num_kv_heads=8, d_ff=14336, vocab_size=49152),
+    "zamba2-2.7b": dict(num_layers=54, d_model=2560, num_heads=32,
+                        num_kv_heads=32, d_ff=10240, vocab_size=32000,
+                        ssm_state=64),
+    "gemma3-12b": dict(num_layers=48, d_model=3840, num_heads=16,
+                       num_kv_heads=8, d_ff=15360, vocab_size=262144),
+    "mamba2-780m": dict(num_layers=48, d_model=1536, d_ff=0,
+                        vocab_size=50280, ssm_state=128),
+    "starcoder2-3b": dict(num_layers=30, d_model=3072, num_heads=24,
+                          num_kv_heads=2, d_ff=12288, vocab_size=49152),
+    "phi3.5-moe-42b-a6.6b": dict(num_layers=32, d_model=4096, num_heads=32,
+                                 num_kv_heads=8, d_ff=6400, vocab_size=32064,
+                                 num_experts=16, experts_per_token=2),
+    "seamless-m4t-medium": dict(num_layers=12, d_model=1024, num_heads=16,
+                                num_kv_heads=16, d_ff=4096,
+                                vocab_size=256206),
+    "llama-3.2-vision-11b": dict(num_layers=40, d_model=4096, num_heads=32,
+                                 num_kv_heads=8, d_ff=14336,
+                                 vocab_size=128256),
+    "gemma2-27b": dict(num_layers=46, d_model=4608, num_heads=32,
+                       num_kv_heads=16, d_ff=36864, vocab_size=256000),
+}
+
+
+def test_all_archs_present():
+    assert set(ARCH_IDS) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_assigned_numbers(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_pattern_divides(arch):
+    cfg = get_config(arch)
+    assert cfg.num_repeats * len(cfg.block_pattern) \
+        + len(cfg.prefix_layers) == cfg.num_layers
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_contract(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= len(r.block_pattern) + len(r.prefix_layers)
+    assert r.d_model <= 512
+    assert (r.num_experts or 0) <= 4
+    assert r.num_repeats >= 1
+
+
+def test_input_shapes():
+    s = INPUT_SHAPES
+    assert s["train_4k"].seq_len == 4096 and s["train_4k"].global_batch == 256
+    assert s["prefill_32k"].seq_len == 32768
+    assert s["prefill_32k"].global_batch == 32
+    assert s["decode_32k"].seq_len == 32768
+    assert s["decode_32k"].global_batch == 128
+    assert s["long_500k"].seq_len == 524288
+    assert s["long_500k"].global_batch == 1
+
+
+def test_long_context_qualification():
+    ok = {a for a in ARCH_IDS if get_config(a).supports_long_context}
+    assert ok == {"mamba2-780m", "zamba2-2.7b", "gemma3-12b", "gemma2-27b",
+                  "starcoder2-3b"}

@@ -1,0 +1,58 @@
+"""Decode-path correctness: step-by-step decode and prefill+decode must
+match the full-sequence forward for every cache mechanism (full KV, ring
+buffer, SSM state, shared attention, cross attention)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+
+ARCHS = ["starcoder2-3b", "mamba2-780m", "zamba2-2.7b", "gemma2-27b",
+         "llama-3.2-vision-11b", "granite-8b"]
+
+
+def _setup(arch, window=8):
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    if cfg.sliding_window:
+        cfg = dataclasses.replace(cfg, sliding_window=window)
+    params = T.init_model(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0,
+                              cfg.vocab_size)
+    memory = None
+    if cfg.family == "vlm":
+        memory = jax.random.normal(
+            jax.random.PRNGKey(3), (1, cfg.num_image_tokens, cfg.d_model),
+            jnp.float32)
+    return cfg, params, toks, memory
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg, params, toks, memory = _setup(arch)
+    full, _ = T.forward(params, cfg, toks, memory=memory)
+    cache = T.init_cache(cfg, 1, 16, memory=memory)
+    outs = []
+    for t in range(16):
+        lg, cache = T.decode_step(params, cfg, toks[:, t:t + 1], cache)
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(jnp.stack(outs, 1) - full)))
+    assert err < 2e-3, (arch, err)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg, params, toks, memory = _setup(arch)
+    full, _ = T.forward(params, cfg, toks, memory=memory)
+    lg_p, cache = T.prefill(params, cfg, toks[:, :12], memory=memory,
+                            cache_len=16)
+    err0 = float(jnp.max(jnp.abs(lg_p - full[:, 11])))
+    assert err0 < 2e-3, (arch, err0)
+    outs = []
+    for t in range(12, 16):
+        lg, cache = T.decode_step(params, cfg, toks[:, t:t + 1], cache)
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(jnp.stack(outs, 1) - full[:, 12:])))
+    assert err < 2e-3, (arch, err)

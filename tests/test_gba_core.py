@@ -1,0 +1,103 @@
+"""Unit tests for the GBA core: token list, decay, aggregation semantics,
+per-ID embedding treatment, buffer-as-train-step-transform."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (TokenList, aggregate_dense, aggregate_embedding,
+                        buffer_push_and_maybe_apply, decay_weights,
+                        init_buffer, num_global_steps, token_for_batch,
+                        token_list)
+
+
+def test_token_list_construction():
+    # Q=10, M=3 -> K=4 steps; tokens ascend, each value repeats M times
+    tl = token_list(10, 3)
+    assert list(np.asarray(tl)) == [0, 0, 0, 1, 1, 1, 2, 2, 2, 3]
+    assert num_global_steps(10, 3) == 4
+    assert token_for_batch(7, 3) == 2
+
+
+def test_token_list_stateful():
+    tl = TokenList(6, 2)
+    assert [tl.fetch() for _ in range(6)] == [0, 0, 1, 1, 2, 2]
+
+
+def test_decay_threshold():
+    tokens = jnp.array([0, 1, 2, 3], jnp.int32)
+    w = decay_weights(tokens, jnp.int32(4), iota=2)
+    np.testing.assert_allclose(np.asarray(w), [0, 0, 1, 1])
+
+
+def test_aggregate_dense_divides_by_m():
+    """Paper Alg.2 line 22: weighted sum / N_a — dropped slots shrink the
+    gradient, they do not renormalize."""
+    grads = {"w": jnp.stack([jnp.ones((4,)), 3 * jnp.ones((4,))])}
+    tokens = jnp.array([0, 10], jnp.int32)
+    out = aggregate_dense(grads, tokens, jnp.int32(10), iota=1)
+    # slot 0 dropped (stale 10), slot 1 kept: (0 + 3)/2
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.5)
+
+
+def test_aggregate_dense_equals_sync_when_fresh():
+    key = jax.random.PRNGKey(0)
+    grads = {"w": jax.random.normal(key, (8, 32))}
+    tokens = jnp.full((8,), 7, jnp.int32)
+    out = aggregate_dense(grads, tokens, jnp.int32(7), iota=0)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(grads["w"].mean(0)), rtol=1e-6)
+
+
+def test_aggregate_embedding_per_id():
+    # 2 slots, capacity 4: slot 0 fresh, slot 1 severely stale
+    ids = jnp.array([[0, 1], [1, 2]], jnp.int32)
+    rows = jnp.ones((2, 2, 3), jnp.float32)
+    tokens = jnp.array([10, 0], jnp.int32)       # slot1 stale by 10
+    # id2 untouched since step 0 -> rescued; id1 updated at step 5 -> dropped
+    last_update = jnp.array([0, 5, 0, 0], jnp.int32)
+    dense, counts = aggregate_embedding(ids, rows, tokens,
+                                        last_update, jnp.int32(10), iota=2,
+                                        capacity=4)
+    np.testing.assert_allclose(np.asarray(counts), [1, 1, 1, 0])
+    np.testing.assert_allclose(np.asarray(dense[0]), np.ones(3))   # slot0
+    np.testing.assert_allclose(np.asarray(dense[1]), np.ones(3))   # slot0 only
+    np.testing.assert_allclose(np.asarray(dense[2]), np.ones(3))   # rescued
+    np.testing.assert_allclose(np.asarray(dense[3]), np.zeros(3))
+
+
+def test_aggregate_embedding_contributor_normalization():
+    # both slots fresh, both touch id 0 -> divided by 2 (Alg.2 line 23)
+    ids = jnp.array([[0], [0]], jnp.int32)
+    rows = jnp.stack([jnp.full((1, 3), 2.0), jnp.full((1, 3), 4.0)])
+    tokens = jnp.array([5, 5], jnp.int32)
+    last_update = jnp.zeros((2,), jnp.int32)
+    dense, counts = aggregate_embedding(ids, rows, tokens, last_update,
+                                        jnp.int32(5), iota=1, capacity=2)
+    np.testing.assert_allclose(np.asarray(counts[0]), 2.0)
+    np.testing.assert_allclose(np.asarray(dense[0]), np.full(3, 3.0))
+
+
+def test_buffer_push_and_apply():
+    """Both cond branches are traced, so apply/noop return data (the
+    aggregate or zeros) rather than performing side effects."""
+    params = {"w": jnp.zeros((4,))}
+    buf = init_buffer(params, buffer_size=3)
+
+    def apply_fn(agg):
+        return (jnp.int32(1), agg["w"])
+
+    def noop_fn():
+        return (jnp.int32(0), jnp.zeros((4,)))
+
+    applied = []
+    for i in range(6):
+        grads = {"w": jnp.full((4,), float(i))}
+        (flag, agg_w), buf = buffer_push_and_maybe_apply(
+            buf, grads, jnp.int32(0), 100, apply_fn, noop_fn)
+        if int(flag):
+            applied.append(np.asarray(agg_w))
+    assert int(buf["step"]) == 2
+    assert len(applied) == 2
+    # first apply: mean(0,1,2) = 1; second: mean(3,4,5) = 4
+    np.testing.assert_allclose(applied[0], np.full(4, 1.0))
+    np.testing.assert_allclose(applied[1], np.full(4, 4.0))

@@ -1,0 +1,68 @@
+"""shard_map GBA (explicit psum of decayed per-worker grads) must equal
+the functional aggregate_dense reference.  Runs in a subprocess with 8
+forced host devices (device count locks at first jax init)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core import aggregate_dense
+from repro.core.gba_shard_map import make_gba_psum_step
+from repro.optim import sgd
+
+mesh = jax.make_mesh((8,), ("data",))
+M = 8
+D = 16
+
+def loss_fn(params, batch):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+key = jax.random.PRNGKey(0)
+params = {"w": jax.random.normal(key, (D,))}
+batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (32, D)),
+         "y": jax.random.normal(jax.random.PRNGKey(2), (32,))}
+tokens = jnp.array([5, 5, 4, 1, 5, 0, 5, 3], jnp.int32)  # workers' tokens
+gstep = jnp.int32(5)
+IOTA = 2
+
+opt = sgd(0.1)
+state = opt.init(params)
+with mesh:
+    step = make_gba_psum_step(mesh, loss_fn, opt, IOTA)
+    batch_sharded = jax.device_put(batch, NamedSharding(mesh, P("data")))
+    tokens_sharded = jax.device_put(tokens, NamedSharding(mesh, P("data")))
+    new_params, _, loss = jax.jit(step)(params, state, batch_sharded,
+                                        tokens_sharded, gstep)
+
+# reference: per-worker grads aggregated with aggregate_dense
+def worker_grads(params):
+    gs = []
+    for i in range(M):
+        shard = {k: v[i * 4:(i + 1) * 4] for k, v in batch.items()}
+        gs.append(jax.grad(loss_fn)(params, shard))
+    return jax.tree.map(lambda *x: jnp.stack(x), *gs)
+
+agg = aggregate_dense(worker_grads(params), tokens, gstep, iota=IOTA)
+ref_params, _ = opt.update(params, agg, opt.init(params))
+err = float(jnp.max(jnp.abs(new_params["w"] - ref_params["w"])))
+print(json.dumps({"err": err, "devices": jax.device_count()}))
+"""
+
+
+def test_shard_map_gba_matches_reference():
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"}, cwd="/root/repo", timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["devices"] == 8
+    assert res["err"] < 1e-5, res

@@ -1,0 +1,139 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracles in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_grad
+from repro.kernels.fused_adagrad import fused_adagrad
+from repro.kernels.gba_aggregate import gba_aggregate
+
+
+@pytest.mark.parametrize("m,d", [(4, 100), (8, 2048), (16, 5000), (100, 97)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gba_aggregate(m, d, dtype):
+    key = jax.random.PRNGKey(m * 1000 + d)
+    g = jax.random.normal(key, (m, d), dtype)
+    tokens = jax.random.randint(key, (m,), 0, 12)
+    step = jnp.int32(10)
+    out = gba_aggregate(g, tokens, step, iota=3)
+    exp = ref.gba_aggregate_ref(g, tokens, step, iota=3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_gba_aggregate_all_dropped_is_zero():
+    g = jnp.ones((4, 64))
+    tokens = jnp.zeros((4,), jnp.int32)
+    out = gba_aggregate(g, tokens, jnp.int32(100), iota=3)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_gba_aggregate_no_staleness_is_mean():
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
+    tokens = jnp.full((8,), 5, jnp.int32)
+    out = gba_aggregate(g, tokens, jnp.int32(5), iota=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g.mean(0)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,f,v,d", [(10, 5, 50, 8), (100, 26, 1000, 16),
+                                     (256, 8, 500, 32), (33, 3, 101, 7)])
+def test_embedding_bag_fwd(b, f, v, d):
+    key = jax.random.PRNGKey(b)
+    ids = jax.random.randint(key, (b, f), 0, v)
+    table = jax.random.normal(key, (v, d), jnp.float32)
+    out = embedding_bag(ids, table)
+    exp = ref.embedding_bag_ref(ids, table)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,f,v,d", [(10, 5, 50, 8), (64, 26, 500, 16)])
+def test_embedding_bag_grad(b, f, v, d):
+    key = jax.random.PRNGKey(b + 7)
+    ids = jax.random.randint(key, (b, f), 0, v)
+    gout = jax.random.normal(key, (b, d), jnp.float32)
+    gt, cnt = embedding_bag_grad(ids, gout, v)
+    gt2, cnt2 = ref.embedding_bag_grad_ref(ids, gout, v)
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(gt2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cnt), np.asarray(cnt2))
+
+
+def test_embedding_bag_grad_counts_sum():
+    ids = jnp.array([[0, 0, 1], [2, 1, 1]], jnp.int32)
+    gout = jnp.ones((2, 4), jnp.float32)
+    _, cnt = embedding_bag_grad(ids, gout, 5)
+    assert float(cnt.sum()) == 6.0
+    np.testing.assert_allclose(np.asarray(cnt), [2, 3, 1, 0, 0])
+
+
+@pytest.mark.parametrize("n", [100, 4096, 4097, 50_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adagrad(n, dtype):
+    key = jax.random.PRNGKey(n)
+    p = jax.random.normal(key, (n,), dtype)
+    g = jax.random.normal(jax.random.PRNGKey(n + 1), (n,), dtype)
+    a = jnp.abs(jax.random.normal(jax.random.PRNGKey(n + 2), (n,)))
+    new_p, new_a = fused_adagrad(p, g, a, 0.01)
+    exp_p, exp_a = ref.fused_adagrad_ref(p, g, a, 0.01)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(new_p, np.float32),
+                               np.asarray(exp_p, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(new_a), np.asarray(exp_a),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_tree_wrappers():
+    from repro.kernels import ops
+    from repro.core.gba import aggregate_dense
+    key = jax.random.PRNGKey(3)
+    grads = {"a": jax.random.normal(key, (8, 16, 4)),
+             "b": {"c": jax.random.normal(key, (8, 30))}}
+    tokens = jax.random.randint(key, (8,), 0, 6)
+    step = jnp.int32(5)
+    out = ops.gba_aggregate_tree(grads, tokens, step, iota=2)
+    exp = aggregate_dense(grads, tokens, step, iota=2)
+    for k in ("a",):
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(exp[k]),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]["c"]),
+                               np.asarray(exp["b"]["c"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def _flash_ref(q, k, v, pos):
+    import math
+    hd = q.shape[-1]
+    L = k.shape[1]
+    scores = jnp.einsum("bngh,blnh->bngl", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.arange(L) <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bngl,blnh->bngh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("b,kv,g,hd,L,pos", [
+    (2, 2, 4, 64, 1024, 1000), (1, 4, 1, 32, 512, 511),
+    (3, 1, 8, 16, 2048, 37), (1, 8, 2, 128, 512, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(b, kv, g, hd, L, pos, dtype):
+    from repro.kernels.flash_decode import flash_decode
+    key = jax.random.PRNGKey(b * 100 + kv)
+    q = jax.random.normal(key, (b, kv, g, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, L, kv, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, L, kv, hd), dtype)
+    out = flash_decode(q, k, v, pos)
+    exp = _flash_ref(q, k, v, pos)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,116 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (aggregate_dense, decay_weights, num_global_steps,
+                        token_list)
+from repro.metrics import auc
+from repro.sim.cluster import ClusterSpec, simulate
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+@given(q=st.integers(1, 500), m=st.integers(1, 50))
+def test_token_list_invariants(q, m):
+    """Ascending; each value repeats M times (except possibly the last);
+    K = ceil(Q/M) distinct values."""
+    tl = np.asarray(token_list(q, m))
+    assert len(tl) == q
+    assert (np.diff(tl) >= 0).all()
+    vals, counts = np.unique(tl, return_counts=True)
+    assert len(vals) == num_global_steps(q, m)
+    assert (counts[:-1] == m).all()
+    assert counts[-1] <= m
+
+
+@given(m=st.integers(1, 32), k=st.integers(0, 100), iota=st.integers(0, 20))
+def test_decay_weights_binary_and_monotone(m, k, iota):
+    tokens = np.sort(np.random.default_rng(m).integers(0, k + 1, m))
+    w = np.asarray(decay_weights(jnp.asarray(tokens, jnp.int32),
+                                 jnp.int32(k), iota))
+    assert set(np.unique(w)) <= {0.0, 1.0}
+    # fresher tokens never have smaller weight (tokens sorted ascending)
+    assert (np.diff(w) >= 0).all()
+
+
+@given(m=st.integers(2, 16), d=st.integers(1, 64),
+       seed=st.integers(0, 2**16))
+def test_aggregate_permutation_invariant(m, d, seed):
+    """Buffer order must not matter (gradients + tokens permuted
+    together)."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(m, d)).astype(np.float32)
+    tokens = rng.integers(0, 10, m).astype(np.int32)
+    perm = rng.permutation(m)
+    out1 = aggregate_dense({"w": jnp.asarray(g)}, jnp.asarray(tokens),
+                           jnp.int32(9), iota=4)
+    out2 = aggregate_dense({"w": jnp.asarray(g[perm])},
+                           jnp.asarray(tokens[perm]), jnp.int32(9), iota=4)
+    np.testing.assert_allclose(np.asarray(out1["w"]),
+                               np.asarray(out2["w"]), rtol=1e-5, atol=1e-6)
+
+
+@given(m=st.integers(1, 16), d=st.integers(1, 64),
+       scale=st.floats(0.1, 10.0), seed=st.integers(0, 2**16))
+def test_aggregate_linear_in_grads(m, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(m, d)).astype(np.float32)
+    tokens = rng.integers(0, 5, m).astype(np.int32)
+    a = aggregate_dense({"w": jnp.asarray(g * scale)}, jnp.asarray(tokens),
+                        jnp.int32(4), iota=2)
+    b = aggregate_dense({"w": jnp.asarray(g)}, jnp.asarray(tokens),
+                        jnp.int32(4), iota=2)
+    np.testing.assert_allclose(np.asarray(a["w"]),
+                               scale * np.asarray(b["w"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(n=st.integers(10, 200), seed=st.integers(0, 2**16))
+def test_auc_against_bruteforce(n, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 2, n).astype(np.float32)
+    scores = rng.normal(size=n)
+    if labels.sum() in (0, n):
+        labels[0] = 1 - labels[0]
+    got = auc(labels, scores)
+    pos = scores[labels > 0.5]
+    neg = scores[labels < 0.5]
+    cmp = (pos[:, None] > neg[None, :]).sum() \
+        + 0.5 * (pos[:, None] == neg[None, :]).sum()
+    expect = cmp / (len(pos) * len(neg))
+    assert abs(got - expect) < 1e-9
+
+
+@given(nw=st.integers(2, 24), nb=st.integers(24, 120),
+       mode=st.sampled_from(["sync", "async", "bsp", "gba", "hop_bs",
+                             "hop_bw"]),
+       seed=st.integers(0, 1000))
+def test_schedule_invariants(nw, nb, mode, seed):
+    """Every scheduled batch appears at most once; dispatch step never
+    exceeds the apply step; GBA kept staleness <= iota."""
+    spec = ClusterSpec(num_workers=nw, straggler_frac=0.3, jitter=0.2,
+                       seed=seed)
+    sched = simulate(spec, mode, nb, 64, buffer_size=nw, iota=3,
+                     b1=2, b2=max(2, nw // 2), b3=1)
+    seen = set()
+    for k, slots in enumerate(sched.steps):
+        for s in slots:
+            assert s.batch_index not in seen
+            seen.add(s.batch_index)
+            assert s.dispatch_step <= k
+            if mode == "gba" and s.weight > 0:
+                assert k - s.token <= 3
+    assert len(seen) <= nb
+
+
+@given(m=st.integers(1, 12), b=st.integers(1, 64))
+def test_global_batch_preserved(m, b):
+    """The tuning-free contract: G_a = B_a * M regardless of worker count
+    (paper Sec. 4.1)."""
+    from repro.configs.base import GBAConfig
+    g = GBAConfig(local_batch=b, buffer_size=m)
+    assert g.global_batch == b * m
+    assert g.resolved_num_workers == m

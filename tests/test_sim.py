@@ -1,0 +1,89 @@
+"""Cluster-simulator behaviour: the qualitative claims of Tab. 5.2/5.3."""
+import numpy as np
+import pytest
+
+from repro.sim.cluster import ClusterSpec, simulate
+
+STRAINED = ClusterSpec(num_workers=16, straggler_frac=0.25,
+                       straggler_slowdown=5.0, jitter=0.2,
+                       time_varying=True, seed=1)
+VACANT = ClusterSpec(num_workers=16, straggler_frac=0.0, jitter=0.02,
+                     ps_throughput=150.0, seed=1)
+
+
+def test_gba_matches_async_qps_under_strain():
+    a = simulate(STRAINED, "async", 960, 256).metrics
+    g = simulate(STRAINED, "gba", 960, 256, buffer_size=16, iota=4).metrics
+    assert abs(g.qps - a.qps) / a.qps < 0.05
+
+
+def test_gba_speedup_over_sync_under_strain():
+    s = simulate(STRAINED, "sync", 960, 256).metrics
+    g = simulate(STRAINED, "gba", 960, 256, buffer_size=16, iota=4).metrics
+    assert g.qps / s.qps >= 2.4, "paper claims >=2.4x under strain"
+
+
+def test_sync_wins_when_vacant():
+    """Fig. 1: with a finite PS, sync HPC is the faster mode on a vacant
+    cluster — the reason mode switching exists at all."""
+    s = simulate(VACANT, "sync", 960, 256).metrics
+    g = simulate(VACANT, "gba", 960, 256, buffer_size=16, iota=4).metrics
+    assert g.qps < s.qps
+
+
+def test_hop_bs_struggles_with_stragglers():
+    h = simulate(STRAINED, "hop_bs", 960, 256, b1=2).metrics
+    a = simulate(STRAINED, "async", 960, 256).metrics
+    assert h.qps < 0.5 * a.qps
+
+
+def test_hop_bw_drops_most():
+    h = simulate(STRAINED, "hop_bw", 960, 256, b3=2).metrics
+    g = simulate(STRAINED, "gba", 960, 256, buffer_size=16, iota=4).metrics
+    assert h.dropped_batches > 20 * max(g.dropped_batches, 1)
+
+
+def test_gba_staleness_bounded_by_iota():
+    g = simulate(STRAINED, "gba", 960, 256, buffer_size=16, iota=4).metrics
+    assert g.staleness_max <= 4
+
+
+def test_hop_bs_staleness_bounded_by_b1():
+    h = simulate(STRAINED, "hop_bs", 960, 256, b1=2).metrics
+    assert h.staleness_max <= 2
+
+
+def test_sync_zero_staleness():
+    s = simulate(STRAINED, "sync", 960, 256).metrics
+    assert s.avg_staleness == 0.0 and s.staleness_max == 0
+
+
+def test_bsp_unbounded_staleness_exceeds_gba():
+    b = simulate(STRAINED, "bsp", 960, 256, b2=16).metrics
+    g = simulate(STRAINED, "gba", 960, 256, buffer_size=16, iota=4).metrics
+    assert b.staleness_max >= g.staleness_max
+
+
+def test_deterministic():
+    m1 = simulate(STRAINED, "gba", 480, 128, buffer_size=16, iota=4).metrics
+    m2 = simulate(STRAINED, "gba", 480, 128, buffer_size=16, iota=4).metrics
+    assert m1.qps == m2.qps and m1.dropped_batches == m2.dropped_batches
+
+
+def test_worker_failures_tolerated():
+    """Alg. 1: a crashed worker's token disappears; GBA keeps its staleness
+    bound and every surviving batch is scheduled exactly once."""
+    spec = ClusterSpec(num_workers=16, straggler_frac=0.25, jitter=0.2,
+                       failure_rate=0.05, seed=3)
+    s = simulate(spec, "gba", 960, 256, buffer_size=16, iota=4)
+    m = s.metrics
+    assert m.lost_batches > 0
+    seen = set()
+    for k, slots in enumerate(s.steps):
+        for sl in slots:
+            assert sl.batch_index not in seen
+            seen.add(sl.batch_index)
+            if sl.weight > 0:
+                assert k - sl.token <= 4
+    assert len(seen) + m.lost_batches <= 960
+    assert len(seen) >= 960 - m.lost_batches - 16  # at most N in flight
