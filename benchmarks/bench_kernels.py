@@ -1,6 +1,15 @@
 """Kernel micro-benchmarks: Pallas (interpret mode) vs jnp oracle, plus the
 *derived* TPU HBM-traffic model that motivates each fusion (interpret-mode
 wall time on CPU is NOT a TPU number — the derived column is the claim).
+
+Rows cover the kernels the train path actually launches:
+
+* ``gba_apply`` — the fused PS apply (decay-aggregate + Adagrad, one VMEM
+  pass); the ref chain reads the buffer 3x (mask/mul/reduce) and round-trips
+  the aggregated gradient through HBM before the optimizer pass.
+* ``embedding_bag_grad`` — the sort-based segment-reduce backward; the
+  derived columns record the grid parallelism (programs) vs the old
+  ``grid=(1,)`` serial scatter.
 """
 from __future__ import annotations
 
@@ -9,9 +18,11 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_call
 from repro.kernels import ref
-from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag import (BLOCK_V, embedding_bag,
+                                         embedding_bag_grad)
 from repro.kernels.fused_adagrad import fused_adagrad
 from repro.kernels.gba_aggregate import gba_aggregate
+from repro.kernels.gba_apply import gba_apply
 
 HBM_BW = 819e9
 
@@ -20,11 +31,35 @@ def run() -> list[str]:
     rows = []
     key = jax.random.PRNGKey(0)
 
-    # gba_aggregate: naive = read buffer 3x (mask/mul/reduce); fused = 1x
-    m, d = 16, 1 << 16
-    g = jax.random.normal(key, (m, d), jnp.bfloat16)
+    # gba_apply: fused aggregate+apply.  Buffer bytes moved: ref chain
+    # reads the (M, N) buffer 3x (mask -> broadcast-mul -> reduce); the
+    # fused kernel reads it once -> 0.33x buffer traffic, and the
+    # aggregated gradient never round-trips through HBM.
+    m, n = 16, 1 << 16
+    p = jax.random.normal(key, (n,))
+    ac = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,)))
+    buf = jax.random.normal(jax.random.PRNGKey(2), (m, n), jnp.bfloat16)
     toks = jax.random.randint(key, (m,), 0, 8)
     step = jnp.int32(7)
+    t_ref = time_call(jax.jit(lambda *a: ref.gba_apply_ref(
+        *a, 0.01, iota=4)), p, ac, buf, toks, step, iters=5)
+    t_ker = time_call(lambda *a: gba_apply(*a, 0.01, iota=4),
+                      p, ac, buf, toks, step, iters=2)
+    buf_bytes_fused = m * n * 2                 # one bf16 read of the buffer
+    buf_bytes_ref = 3 * m * n * 2               # mask/mul/reduce chain
+    total_fused = buf_bytes_fused + 4 * n * 4   # + p/a reads, p/a writes
+    rows.append(csv_row(
+        "kernel.gba_apply.16x64k", t_ker,
+        f"ref_us={t_ref:.1f};buffer_bytes={buf_bytes_fused:.2e};"
+        f"ref_buffer_bytes={buf_bytes_ref:.2e};"
+        f"buffer_ratio={buf_bytes_fused / buf_bytes_ref:.2f};"
+        f"tpu_roofline_us={total_fused / HBM_BW * 1e6:.1f};"
+        f"fusion=aggregate+adagrad_one_pass"))
+
+    # gba_aggregate: the standalone reduction (still behind
+    # ops.gba_aggregate_tree); the train path now prefers gba_apply
+    m, d = 16, 1 << 16
+    g = jax.random.normal(key, (m, d), jnp.bfloat16)
     t_ref = time_call(jax.jit(lambda a, b, c: ref.gba_aggregate_ref(
         a, b, c, iota=4)), g, toks, step, iters=5)
     t_ker = time_call(lambda a, b, c: gba_aggregate(a, b, c, iota=4),
@@ -34,7 +69,7 @@ def run() -> list[str]:
         "kernel.gba_aggregate.16x64k.bf16", t_ker,
         f"ref_us={t_ref:.1f};buffer_bytes={traffic:.2e};"
         f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f};"
-        f"fusion_saves=2x_buffer_reads"))
+        f"superseded_by=gba_apply"))
 
     # embedding_bag: gather+pool fused
     b, f, v, dim = 512, 26, 100_003, 16
@@ -47,6 +82,26 @@ def run() -> list[str]:
         "kernel.embedding_bag.512x26", t_ker,
         f"ref_us={t_ref:.1f};row_bytes={traffic:.2e};"
         f"tpu_roofline_us={traffic / HBM_BW * 1e6:.2f}"))
+
+    # embedding_bag_grad: sorted-scatter backward.  The old kernel was a
+    # single serial program; the sort-based segment reduce grids over
+    # vocab blocks with disjoint outputs.
+    gb, gf, gv, gd = 256, 26, 20_011, 16
+    gids = jax.random.randint(key, (gb, gf), 0, gv)
+    gout = jax.random.normal(key, (gb, gd), jnp.float32)
+    t_ref = time_call(jax.jit(lambda i, g: ref.embedding_bag_grad_ref(
+        i, g, gv)), gids, gout, iters=5)
+    t_ker = time_call(lambda i, g: embedding_bag_grad(i, g, gv),
+                      gids, gout, iters=2)
+    e = gb * gf
+    programs = (gv + BLOCK_V - 1) // BLOCK_V
+    traffic = (e * (4 + gd * 4)          # sorted (id, row) stream read
+               + gv * (gd * 4 + 4))      # table grads + counts written
+    rows.append(csv_row(
+        "kernel.embedding_bag_grad.256x26.sorted", t_ker,
+        f"ref_us={t_ref:.1f};grid_programs={programs};serial=0;"
+        f"scatter_bytes={traffic:.2e};"
+        f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f}"))
 
     # fused_adagrad: 3 reads + 2 writes in one pass
     n = 1 << 18

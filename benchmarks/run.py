@@ -2,13 +2,49 @@
 roofline).  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6,tab52] [--fast]
+        [--json [PATH]]
+
+``--json`` additionally writes the kernel + roofline rows (with the derived
+``k=v`` columns parsed into numbers) to ``BENCH_kernels.json`` so the perf
+trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+JSON_SUITES = ("kernels", "roofline")
+
+
+def parse_derived(derived: str) -> dict:
+    """'a=1.5;b=2e3;c=foo' -> {'a': 1.5, 'b': 2000.0, 'c': 'foo'}."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def rows_to_json(collected: dict[str, list[str]]) -> list[dict]:
+    records = []
+    for suite, rows in collected.items():
+        for row in rows:
+            name, us, derived = row.split(",", 2)
+            records.append({
+                "suite": suite,
+                "name": name,
+                "us_per_call": float(us),
+                **parse_derived(derived),
+            })
+    return records
 
 
 def main() -> None:
@@ -17,6 +53,10 @@ def main() -> None:
                     help="comma-separated substrings to select benchmarks")
     ap.add_argument("--fast", action="store_true",
                     help="reduced sizes for smoke runs")
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default="",
+                    help="write kernel/roofline rows as JSON "
+                         "(default BENCH_kernels.json)")
     args = ap.parse_args()
 
     from benchmarks import (bench_autoswitch, bench_convergence,
@@ -51,19 +91,29 @@ def main() -> None:
     selected = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")
     failures = 0
+    collected: dict[str, list[str]] = {}
     for name, fn in suites:
         if selected and not any(s in name for s in selected):
             continue
         t0 = time.time()
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(row)
+            collected[name] = rows
             print(f"suite.{name},0.0,elapsed_s={time.time() - t0:.1f}",
                   flush=True)
         except Exception:
             failures += 1
             print(f"suite.{name},0.0,FAILED", flush=True)
             traceback.print_exc()
+    if args.json:
+        records = rows_to_json(
+            {k: v for k, v in collected.items() if k in JSON_SUITES})
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"suite.json,0.0,wrote={args.json};rows={len(records)}",
+              flush=True)
     if failures:
         sys.exit(1)
 

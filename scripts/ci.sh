@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate + kernel perf smoke: what a CI runner executes on every PR.
+#
+#   scripts/ci.sh
+#
+# Runs the full test suite (property tests auto-skip when hypothesis is
+# absent; heavy replay tests are deselected by default via pytest.ini) and
+# the kernel micro-benchmarks, leaving BENCH_kernels.json for the perf
+# trajectory.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q
+python -m benchmarks.run --only kernels --fast --json BENCH_kernels.json

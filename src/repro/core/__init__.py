@@ -4,9 +4,10 @@ baselines and the continual-training driver (see DESIGN.md §1)."""
 from repro.core.continual import (ContinualResult, ModeSetup, default_setups,
                                   pretrain_sync, run_continual,
                                   schedule_for_day)
-from repro.core.gba import (aggregate_dense, aggregate_embedding,
+from repro.core.gba import (FlatLayout, aggregate_dense, aggregate_embedding,
                             buffer_push_and_maybe_apply, decay_weights,
-                            init_buffer)
+                            flat_buffer_push, flat_buffer_push_and_maybe_apply,
+                            init_buffer, init_flat_buffer)
 from repro.core.staleness import (DECAY_FNS, exponential_decay, linear_decay,
                                   threshold_decay)
 from repro.core.tokens import (TokenList, num_global_steps, token_for_batch,
@@ -14,10 +15,12 @@ from repro.core.tokens import (TokenList, num_global_steps, token_for_batch,
 from repro.core.trainer import GBATrainer, ReplayStats, evaluate
 
 __all__ = [
-    "ContinualResult", "DECAY_FNS", "GBATrainer", "ModeSetup", "ReplayStats",
-    "TokenList", "aggregate_dense", "aggregate_embedding",
+    "ContinualResult", "DECAY_FNS", "FlatLayout", "GBATrainer", "ModeSetup",
+    "ReplayStats", "TokenList", "aggregate_dense", "aggregate_embedding",
     "buffer_push_and_maybe_apply", "decay_weights", "default_setups",
-    "evaluate", "exponential_decay", "init_buffer", "linear_decay",
-    "num_global_steps", "pretrain_sync", "run_continual", "schedule_for_day",
-    "threshold_decay", "token_for_batch", "token_list",
+    "evaluate", "exponential_decay", "flat_buffer_push",
+    "flat_buffer_push_and_maybe_apply",
+    "init_buffer", "init_flat_buffer", "linear_decay", "num_global_steps",
+    "pretrain_sync", "run_continual", "schedule_for_day", "threshold_decay",
+    "token_for_batch", "token_list",
 ]

@@ -16,9 +16,24 @@ Two entry points:
 Both are pure functions usable inside pjit/shard_map; the Pallas kernel in
 ``repro.kernels.gba_aggregate`` is a drop-in replacement for the inner
 weighted reduction of :func:`aggregate_dense`.
+
+Flat-buffer layout (the PS hot path)
+------------------------------------
+``buffer_push_and_maybe_apply`` keeps the buffer as a pytree mirroring the
+gradients — one XLA op chain per leaf on every push AND every apply.  The
+fused path instead ravels all dense leaves into a single ``(M, N_total)``
+f32 buffer using :class:`FlatLayout`: leaves are laid out back-to-back in
+treedef order, each occupying ``[offsets[j], offsets[j] + sizes[j])`` of
+the flat axis.  A push is then one ``dynamic_update_index_in_dim`` and an
+apply is ONE launch of the fused ``repro.kernels.gba_apply`` kernel
+(token-decay aggregation + Adagrad in a single VMEM pass), instead of a
+per-leaf aggregate -> HBM -> per-leaf optimizer chain.  See
+:func:`init_flat_buffer` / :func:`flat_buffer_push_and_maybe_apply`.
 """
 from __future__ import annotations
 
+import math
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
@@ -147,3 +162,125 @@ def buffer_push_and_maybe_apply(
         "step": buffer["step"] + is_full.astype(jnp.int32),
     }
     return out, new_buffer
+
+
+# ---------------------------------------------------------------------------
+# flat buffer: one (M, N_total) array + offsets table -> one kernel launch
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FlatLayout:
+    """Ravel/unravel a dense parameter pytree to one flat f32 vector.
+
+    Leaves are concatenated in ``jax.tree`` (treedef) order; leaf ``j``
+    lives at ``flat[offsets[j] : offsets[j] + sizes[j]]``.  The layout is a
+    host-side object (hashable tuples only) so it can be closed over by
+    jitted train steps.
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    sizes: tuple[int, ...]
+    offsets: tuple[int, ...]
+    total: int
+
+    @classmethod
+    def from_params(cls, params: Params) -> "FlatLayout":
+        leaves, treedef = jax.tree.flatten(params)
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(l.dtype for l in leaves)
+        sizes = tuple(math.prod(s) for s in shapes)
+        offsets = []
+        off = 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        return cls(treedef, shapes, dtypes, sizes, tuple(offsets), off)
+
+    def ravel(self, tree: Params) -> jax.Array:
+        leaves = jax.tree.leaves(tree)
+        return jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+    def unravel(self, flat: jax.Array) -> Params:
+        leaves = [
+            flat[o:o + n].reshape(s).astype(dt)
+            for o, n, s, dt in zip(self.offsets, self.sizes, self.shapes,
+                                   self.dtypes)
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+def init_flat_buffer(params: Params, buffer_size: int
+                     ) -> tuple[FlatLayout, dict]:
+    """Flat M-slot gradient buffer: one (M, N_total) array instead of a
+    leading-M pytree.  Returns (layout, buffer)."""
+    layout = FlatLayout.from_params(params)
+    return layout, {
+        "grads": jnp.zeros((buffer_size, layout.total), jnp.float32),
+        "tokens": jnp.zeros((buffer_size,), jnp.int32),
+        "fill": jnp.zeros((), jnp.int32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def flat_buffer_push(buffer: dict, flat_grad: jax.Array, token: jax.Array
+                     ) -> tuple[dict, jax.Array]:
+    """Push one raveled gradient into the flat buffer.  Returns
+    ``(new_buffer, is_full)``; ``new_buffer["step"]`` is already advanced
+    when the push filled the buffer, but ``new_buffer["tokens"]`` /
+    ``["grads"]`` still hold the slots for the apply that must follow
+    (the single source of slot/fill/step arithmetic for the fused path).
+    """
+    m = buffer["tokens"].shape[0]
+    slot = buffer["fill"] % m
+    new_grads = jax.lax.dynamic_update_index_in_dim(
+        buffer["grads"], flat_grad.astype(jnp.float32), slot, 0)
+    new_tokens = jax.lax.dynamic_update_index_in_dim(
+        buffer["tokens"], token.astype(jnp.int32), slot, 0)
+    fill = buffer["fill"] + 1
+    is_full = (fill % m) == 0
+    new_buffer = {
+        "grads": new_grads,
+        "tokens": new_tokens,
+        "fill": fill,
+        "step": buffer["step"] + is_full.astype(jnp.int32),
+    }
+    return new_buffer, is_full
+
+
+def flat_buffer_push_and_maybe_apply(
+        buffer: dict, flat_grad: jax.Array, token: jax.Array,
+        param_flat: jax.Array, accum_flat: jax.Array, lr, *, iota: int,
+        eps: float = 1e-10, interpret: bool | None = None):
+    """Fused-path counterpart of :func:`buffer_push_and_maybe_apply`.
+
+    Pushes one raveled gradient; when the buffer fills, runs the fused
+    ``gba_apply`` Pallas kernel (decay-aggregate + Adagrad, one launch for
+    the whole dense module).  Returns
+    ``(new_param_flat, new_accum_flat, applied, new_buffer)`` — on non-full
+    pushes params/accum pass through unchanged.
+
+    Callers that keep params as a pytree (``launch.steps``'s fused train
+    step ravels/unravels inside the apply branch only) use
+    :func:`flat_buffer_push` directly and wrap their own ``lax.cond``.
+    """
+    from repro.kernels import ops
+
+    new_buffer, is_full = flat_buffer_push(buffer, flat_grad, token)
+
+    def do_apply(operands):
+        p, a, grads, tokens, step = operands
+        return ops.gba_apply_flat(p, a, grads, tokens, step, lr,
+                                  iota=iota, eps=eps, interpret=interpret)
+
+    def do_noop(operands):
+        p, a, *_ = operands
+        return p, a
+
+    new_param, new_accum = jax.lax.cond(
+        is_full, do_apply, do_noop,
+        (param_flat, accum_flat, new_buffer["grads"], new_buffer["tokens"],
+         buffer["step"]))
+    return new_param, new_accum, is_full, new_buffer

@@ -7,6 +7,15 @@ gradient of every slot is computed against the parameter version of its
 mode's rule — GBA's token decay + per-ID embedding treatment, BSP's plain
 mean, Hop-BW's drop-slowest, async's immediate apply.
 
+Each global step is ONE jitted call: the M slot batches are stacked, the
+per-slot gradients come from a single ``vmap`` over stacked parameter
+versions, and the whole aggregate — token-decay weighting of the dense
+module, per-ID mask/count accumulation for the sparse module, contributor
+normalization, optimizer update and ``last_update`` stamping — happens
+inside the compiled step.  The previous implementation dispatched M
+sequential ``value_and_grad`` calls per step and accumulated masks in
+Python; the batched step removes that host round-trip from the PS hot loop.
+
 This gives the accuracy experiments (paper Figs. 2/6/7/8) exact parameter-
 server staleness semantics while remaining deterministic and laptop-fast.
 """
@@ -77,19 +86,106 @@ class GBATrainer:
     history: int = 64
 
     def __post_init__(self):
-        self._loss_grad = jax.jit(jax.value_and_grad(
-            lambda p, b: R.bce_loss(p, self.cfg, b)))
-        cap = self.cfg.hash_capacity
-        self._present = jax.jit(
-            lambda ids: jnp.zeros((cap,), jnp.float32).at[
-                ids.reshape(-1)].add(1.0))
+        self._loss_grad_fn = jax.value_and_grad(
+            lambda p, b: R.bce_loss(p, self.cfg, b))
+        self._loss_grad = jax.jit(self._loss_grad_fn)
+        # jitted batched-step cache keyed by (gba, m, shared_src); shapes
+        # are fixed per (config, stream) so each key compiles once
+        self._step_cache: dict[tuple, Any] = {}
 
-    def _batch_ids(self, batch: dict) -> np.ndarray:
-        parts = [batch["fields"].reshape(-1)]
-        if "behavior" in batch:
-            parts.append(batch["behavior"].reshape(-1))
-            parts.append(batch["target"].reshape(-1))
-        return np.concatenate(parts)
+    # -- batched global step -------------------------------------------------
+
+    def _flat_ids(self, batches: dict, m: int) -> jax.Array:
+        """All hashed IDs each slot touched: (M, n_ids)."""
+        parts = [batches["fields"].reshape(m, -1)]
+        if "behavior" in batches:
+            parts.append(batches["behavior"].reshape(m, -1))
+            parts.append(batches["target"].reshape(m, -1))
+        return jnp.concatenate(parts, axis=1)
+
+    def _make_step(self, gba: bool, m: int, shared_src: bool):
+        """Build the jitted per-global-step function.
+
+        ``shared_src``: every slot dispatched at the same parameter version
+        (sync-like schedules) — the gradients vmap over batches only, with
+        the params broadcast, skipping the M-way parameter stack.
+        """
+        cap = self.cfg.hash_capacity
+        iota = self.iota
+        opt_update = self.optimizer.update
+        grad_fn = self._loss_grad_fn
+        in_axes = (None, 0) if shared_src else (0, 0)
+
+        def step(src_params, params, opt_state, batches, tokens, weights,
+                 step_k, last_update):
+            losses, grads = jax.vmap(grad_fn, in_axes=in_axes)(
+                src_params, batches)
+            sparse_g, dense_g = _split_tree(grads)
+
+            # dense module: Alg. 2 line 22 — weighted sum / N_a (= m)
+            wm = (weights / m).astype(jnp.float32)
+            agg = jax.tree.map(
+                lambda g: jnp.tensordot(wm, g.astype(jnp.float32),
+                                        axes=(0, 0)).astype(g.dtype),
+                dense_g)
+
+            # sparse module: per-ID treatment (Alg. 2 lines 21/23)
+            ids_all = self._flat_ids(batches, m)
+            present = jax.vmap(
+                lambda ids: jnp.zeros((cap,), jnp.float32).at[ids].add(1.0)
+            )(ids_all)
+            touched01 = (present > 0).astype(jnp.float32)       # (M, cap)
+            rescued = jnp.int32(0)
+            if gba:
+                # per-ID relaxation: a slot dropped by Eq.(1) may still
+                # contribute rows whose IDs were untouched since its token
+                slot_ok = (step_k - tokens) <= iota             # (M,)
+                id_fresh = last_update[None, :] <= tokens[:, None]
+                keep_row = jnp.where(slot_ok[:, None], 1.0,
+                                     id_fresh.astype(jnp.float32))
+                row_mask = touched01 * keep_row                 # (M, cap)
+                rescued = jnp.sum(
+                    ((~slot_ok) & (jnp.sum(row_mask, axis=1) > 0)
+                     ).astype(jnp.int32))
+                emb_num = {
+                    name: jnp.sum(
+                        g * (row_mask[..., None] if g.ndim == 3
+                             else row_mask), axis=0)
+                    for name, g in sparse_g.items()
+                }
+                emb_cnt = jnp.sum(row_mask, axis=0)
+            else:
+                # same denominator semantics as the GBA path: an ID's
+                # contributor count is the number of SLOTS that touched
+                # it (Alg. 2 line 23), not its occurrence count
+                emb_num = {
+                    name: jnp.tensordot(weights, g, axes=(0, 0))
+                    for name, g in sparse_g.items()
+                }
+                emb_cnt = jnp.sum(touched01 * weights[:, None], axis=0)
+
+            # embedding aggregate: divide by #slots that touched the ID
+            # (Alg. 2 line 23); baselines divide by the same rule for parity
+            full_grads = dict(agg)
+            cntc = jnp.maximum(emb_cnt, 1.0)
+            for name, g in emb_num.items():
+                full_grads[name] = g / (cntc[:, None] if g.ndim > 1
+                                        else cntc)
+            params, opt_state = opt_update(params, full_grads, opt_state)
+            if sparse_g:
+                touched = emb_cnt > 0
+                last_update = jnp.where(touched, step_k, last_update)
+            return params, opt_state, last_update, losses, rescued
+
+        return jax.jit(step)
+
+    def _get_step(self, gba: bool, m: int, shared_src: bool):
+        key = (gba, m, shared_src)
+        if key not in self._step_cache:
+            self._step_cache[key] = self._make_step(gba, m, shared_src)
+        return self._step_cache[key]
+
+    # -- schedule replay -----------------------------------------------------
 
     def replay(self, params: Params, opt_state: Any, schedule: Schedule,
                stream: ClickStream, day: int, *,
@@ -106,71 +202,34 @@ class GBATrainer:
         for k, slots in enumerate(schedule.steps):
             ring.put(k, params)
             m = len(slots)
-            agg = None
-            emb_num: dict[str, jax.Array] = {}
-            emb_cnt: dict[str, jax.Array] = {}
-            losses = []
+            srcs = []
             for slot in slots:
-                src_params, clamped = ring.get(slot.dispatch_step)
+                src, clamped = ring.get(slot.dispatch_step)
                 stats.history_clamps += int(clamped)
-                batch = stream.batch(day, slot.batch_index)
-                loss, grads = self._loss_grad(src_params, batch)
-                losses.append(float(loss))
-                sparse_g, dense_g = _split_tree(grads)
-                w = slot.weight
-                if gba:
-                    # per-ID relaxation: a slot dropped by Eq.(1) may still
-                    # contribute rows whose IDs were untouched since its token
-                    present = self._present(
-                        jnp.asarray(self._batch_ids(batch)))
-                    slot_ok = (k - slot.token) <= self.iota
-                    id_fresh = last_update <= slot.token
-                    keep_row = (jnp.float32(slot_ok) + (1 - jnp.float32(
-                        slot_ok)) * id_fresh.astype(jnp.float32))
-                    row_mask = (present > 0).astype(jnp.float32) * keep_row
-                    if not slot_ok:
-                        stats.embed_rows_rescued += int(
-                            jnp.sum(row_mask) > 0)
-                    for name, g in sparse_g.items():
-                        mask = row_mask if g.ndim == 1 else row_mask[:, None]
-                        emb_num[name] = emb_num.get(name, 0) + g * mask
-                        emb_cnt[name] = emb_cnt.get(name, 0) + row_mask
-                else:
-                    # same denominator semantics as the GBA path: an ID's
-                    # contributor count is the number of SLOTS that touched
-                    # it (Alg. 2 line 23), not its occurrence count
-                    present = self._present(
-                        jnp.asarray(self._batch_ids(batch)))
-                    touched01 = (present > 0).astype(jnp.float32)
-                    for name, g in sparse_g.items():
-                        emb_num[name] = emb_num.get(name, 0) + g * w
-                        emb_cnt[name] = (emb_cnt.get(name, 0)
-                                         + touched01 * w)
-                if w > 0:
+                srcs.append(src)
+            shared_src = all(s.dispatch_step == slots[0].dispatch_step
+                             for s in slots)
+            if shared_src:
+                src_params = srcs[0]
+            else:
+                src_params = jax.tree.map(lambda *xs: jnp.stack(xs), *srcs)
+            raw = [stream.batch(day, slot.batch_index) for slot in slots]
+            batches = {key: jnp.asarray(np.stack([b[key] for b in raw]))
+                       for key in raw[0]}
+            tokens = jnp.asarray([s.token for s in slots], jnp.int32)
+            weights = jnp.asarray([s.weight for s in slots], jnp.float32)
+            step_fn = self._get_step(gba, m, shared_src)
+            params, opt_state, last_update, losses, rescued = step_fn(
+                src_params, params, opt_state, batches, tokens, weights,
+                jnp.int32(k), last_update)
+            for slot in slots:
+                if slot.weight > 0:
                     stats.kept_slots += 1
                 else:
                     stats.dropped_slots += 1
-                scaled = jax.tree.map(lambda g: g * (w / m), dense_g)
-                agg = scaled if agg is None else jax.tree.map(
-                    jnp.add, agg, scaled)
-
-            # embedding aggregate: divide by #slots that touched the ID
-            # (Alg. 2 line 23); baselines divide by the same rule for parity
-            full_grads = dict(agg)
-            touched = None
-            for name in emb_num:
-                cnt = emb_cnt[name]
-                cntc = jnp.maximum(cnt, 1.0)
-                g = emb_num[name]
-                full_grads[name] = g / (cntc[:, None] if g.ndim > 1 else cntc)
-                touched = cnt > 0 if touched is None else (touched
-                                                           | (cnt > 0))
-            params, opt_state = self.optimizer.update(
-                params, full_grads, opt_state)
-            if touched is not None:
-                last_update = jnp.where(touched, k, last_update)
+            stats.embed_rows_rescued += int(rescued)
             stats.applied_steps += 1
-            stats.losses.append(float(np.mean(losses)))
+            stats.losses.append(float(jnp.mean(losses)))
         return params, opt_state, last_update, stats
 
 

@@ -1,3 +1,24 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the PS hot path (+ pure-jnp oracles in ref.py).
+
+Layout of the package:
+
+* ``embedding_bag``  — pooled lookup forward; **sorted-scatter** backward:
+  the B*F (id, row) pairs are sorted by id once, per-vocab-block segment
+  boundaries come from a searchsorted, and the grid runs one program per
+  disjoint (BLOCK_V, D) output block — parallel, race-free, with per-ID
+  contributor counts produced in the same pass (Alg. 2 line 23).
+* ``gba_apply``      — the fused PS apply: token-decay aggregation over the
+  flat (M, N_total) gradient buffer AND the Adagrad update in one VMEM
+  pass; fed by ``repro.core.gba.FlatLayout`` (dense pytree leaves raveled
+  back-to-back with an offsets table) so the whole apply is one launch.
+* ``gba_aggregate``  — standalone decayed reduction (M, D) -> (D,); kept
+  for tree-level use, superseded on the train path by ``gba_apply``.
+* ``fused_adagrad``  — standalone one-pass Adagrad; same story.
+* ``flash_decode``   — decode-time attention for the serving stack.
+* ``ops``            — jit'd wrappers + the global interpret-mode switch.
+
+Every kernel has an allclose oracle in ``ref`` and a parity sweep in
+``tests/test_kernels.py``.  Remaining gaps (ROADMAP "Open items"): tables
+larger than VMEM need DMA-streamed rows, and the kernels have only been
+validated in interpret mode in this container, not on real TPUs.
+"""

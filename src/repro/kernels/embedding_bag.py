@@ -1,4 +1,4 @@
-"""Pallas TPU kernels: pooled hash-embedding lookup + scatter gradient.
+"""Pallas TPU kernels: pooled hash-embedding lookup + sorted-scatter grad.
 
 The compute hot-spot of the paper's recommendation workloads is the sparse
 module: per-batch gather of F rows per example (forward) and the per-ID
@@ -11,10 +11,19 @@ configs; production tables would stream rows by DMA — noted, not modeled).
 
 * forward: grid over batch blocks; each program gathers F rows per example
   and sum-pools them: ids (Bblk, F) + table (V, D) -> out (Bblk, D).
-* backward: scatter-add with contributor counts — a single-program serial
-  kernel (scatter targets collide, so parallelizing over the grid would
-  race; the TPU-native answer is one sequential vector pass, which is also
-  how the PS applies its buffer).
+
+* backward: **sort-based segment reduce** instead of a serial scatter.
+  Scatter targets collide, so a naive grid over (batch x field) would race
+  on the output rows.  We instead sort the B*F (id, row) pairs by id ONCE
+  on the host side of the kernel (XLA sort), compute per-vocab-block
+  segment boundaries with a searchsorted, and grid over vocab blocks: each
+  program owns a disjoint (BLOCK_V, D) slice of the gradient table and
+  consumes only its own contiguous run of sorted entries, so there are no
+  races and the grid is fully parallel.  Within a program the run is
+  processed in CHUNK_E-sized chunks as a one-hot matmul
+  (CHUNK_E, BLOCK_V)^T @ (CHUNK_E, D) — MXU-shaped, not element-at-a-time —
+  and the per-ID contributor counts fall out of the same one-hot reduction
+  in the same pass.
 """
 from __future__ import annotations
 
@@ -23,8 +32,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_B = 256
+BLOCK_V = 512      # vocab rows owned by one backward program
+CHUNK_E = 256      # sorted (id, row) entries consumed per inner step
 
 
 def _fwd_kernel(ids_ref, table_ref, out_ref):
@@ -64,23 +76,45 @@ def embedding_bag(ids: jax.Array, table: jax.Array, *,
     return out[:b]
 
 
-def _bwd_kernel(ids_ref, gout_ref, gtable_ref, counts_ref):
-    """Serial scatter-add: grad_out (B, D), ids (B, F) ->
-    grad_table (V, D), counts (V,)."""
-    b, f = ids_ref.shape
-    gtable_ref[...] = jnp.zeros_like(gtable_ref)
-    counts_ref[...] = jnp.zeros_like(counts_ref)
+def _bwd_kernel(offsets_ref, ids_ref, rows_ref, gtable_ref, counts_ref):
+    """Segment reduce for one vocab block.
 
-    def body(i, _):
-        bi = i // f
-        fi = i % f
-        idx = ids_ref[bi, fi]
-        row = gout_ref[bi, :].astype(jnp.float32)
-        gtable_ref[idx, :] += row.astype(gtable_ref.dtype)
-        counts_ref[idx] += jnp.float32(1.0)
-        return 0
+    offsets_ref: (nblocks+1,) SMEM — run boundaries in the sorted arrays
+    ids_ref:     (E_pad,)  sorted ids
+    rows_ref:    (E_pad, D) gradient rows in sorted-id order
+    gtable_ref:  (BLOCK_V, D) output block owned exclusively by this program
+    counts_ref:  (BLOCK_V,)   contributor counts for the same rows
+    """
+    i = pl.program_id(0)
+    v0 = i * BLOCK_V
+    start = offsets_ref[i]
+    end = offsets_ref[i + 1]
+    d = rows_ref.shape[1]
+    vids = v0 + jax.lax.broadcasted_iota(jnp.int32, (CHUNK_E, BLOCK_V), 1)
 
-    jax.lax.fori_loop(0, b * f, body, 0)
+    def body(c, carry):
+        acc, cnt = carry
+        p0 = start + c * CHUNK_E
+        idx = ids_ref[pl.ds(p0, CHUNK_E)]                     # (CHUNK_E,)
+        rows = rows_ref[pl.ds(p0, CHUNK_E), :].astype(jnp.float32)
+        pos = p0 + jax.lax.broadcasted_iota(jnp.int32, (CHUNK_E, 1),
+                                            0)[:, 0]
+        valid = pos < end
+        onehot = ((idx[:, None] == vids)
+                  & valid[:, None]).astype(jnp.float32)       # (E, V)
+        acc = acc + jax.lax.dot_general(
+            onehot, rows, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (V, D)
+        cnt = cnt + jnp.sum(onehot, axis=0)
+        return acc, cnt
+
+    nchunks = (end - start + CHUNK_E - 1) // CHUNK_E
+    acc, cnt = jax.lax.fori_loop(
+        0, nchunks, body,
+        (jnp.zeros((BLOCK_V, d), jnp.float32),
+         jnp.zeros((BLOCK_V,), jnp.float32)))
+    gtable_ref[...] = acc
+    counts_ref[...] = cnt
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
@@ -89,24 +123,49 @@ def embedding_bag_grad(ids: jax.Array, grad_out: jax.Array, capacity: int,
                        ) -> tuple[jax.Array, jax.Array]:
     """Scatter grads back to rows with per-ID contributor counts.
 
-    ids: (B, F); grad_out: (B, D) -> (grad_table (V, D), counts (V,))."""
+    ids: (B, F); grad_out: (B, D) -> (grad_table (V, D), counts (V,)).
+
+    Sort once, then reduce disjoint segments in parallel over the grid —
+    see the module docstring for the design.
+    """
     b, f = ids.shape
     d = grad_out.shape[1]
+    e = b * f
+    flat_ids = ids.reshape(-1).astype(jnp.int32)
+    order = jnp.argsort(flat_ids)
+    sorted_ids = flat_ids[order]
+    sorted_rows = grad_out[order // f]                        # (E, D)
+
+    cap_pad = capacity + ((-capacity) % BLOCK_V)
+    nblocks = cap_pad // BLOCK_V
+    boundaries = jnp.arange(nblocks + 1, dtype=jnp.int32) * BLOCK_V
+    offsets = jnp.searchsorted(sorted_ids, boundaries).astype(jnp.int32)
+
+    # pad so the CHUNK_E-wide dynamic slices never run off the end; the
+    # sentinel id cap_pad matches no block and is masked out anyway
+    e_pad = e + ((-e) % CHUNK_E) + CHUNK_E
+    sorted_ids = jnp.pad(sorted_ids, (0, e_pad - e),
+                         constant_values=cap_pad)
+    sorted_rows = jnp.pad(sorted_rows, ((0, e_pad - e), (0, 0)))
+
     gtable, counts = pl.pallas_call(
         _bwd_kernel,
-        grid=(1,),
-        in_specs=[
-            pl.BlockSpec((b, f), lambda i: (0, 0)),
-            pl.BlockSpec((b, d), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((capacity, d), lambda i: (0, 0)),
-            pl.BlockSpec((capacity,), lambda i: (0,)),
-        ],
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nblocks,),
+            in_specs=[
+                pl.BlockSpec((e_pad,), lambda i, *_: (0,)),
+                pl.BlockSpec((e_pad, d), lambda i, *_: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((BLOCK_V, d), lambda i, *_: (i, 0)),
+                pl.BlockSpec((BLOCK_V,), lambda i, *_: (i,)),
+            ],
+        ),
         out_shape=[
-            jax.ShapeDtypeStruct((capacity, d), jnp.float32),
-            jax.ShapeDtypeStruct((capacity,), jnp.float32),
+            jax.ShapeDtypeStruct((cap_pad, d), jnp.float32),
+            jax.ShapeDtypeStruct((cap_pad,), jnp.float32),
         ],
         interpret=interpret,
-    )(ids, grad_out)
-    return gtable, counts
+    )(offsets, sorted_ids, sorted_rows)
+    return gtable[:capacity], counts[:capacity]

@@ -22,6 +22,17 @@ from jax.experimental.pallas import tpu as pltpu
 BLOCK_L = 512
 
 
+def _compiler_params():
+    """jax renamed TPUCompilerParams -> CompilerParams across versions;
+    fall back to no params (compiler defaults) rather than crashing when
+    neither name exists."""
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    return cls(dimension_semantics=("parallel", "arbitrary"))
+
+
 def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             *, blk: int):
     j = pl.program_id(1)
@@ -86,8 +97,7 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=_compiler_params(),
         interpret=interpret,
     )(jnp.asarray(pos, jnp.int32).reshape(1), q, k, v)
     return out

@@ -4,6 +4,10 @@ Adagrad is the paper's optimizer for the async/GBA modes (Tab. 5.1).  The
 naive XLA form reads grad, reads accum, writes accum, reads accum again,
 writes param — this kernel does one VMEM pass per block: accum += g^2;
 param -= lr * g / (sqrt(accum) + eps), with both outputs aliased in-place.
+
+NOTE: when the gradient comes from the GBA buffer, the train path uses
+``repro.kernels.gba_apply`` instead, which fuses the buffer aggregation
+with this update in the same pass (the gradient never hits HBM).
 """
 from __future__ import annotations
 

@@ -10,6 +10,11 @@ TPU adaptation: the buffer is tiled along D into ``(M, BLOCK_D)`` VMEM
 blocks (M is small — 8..100 — so a full buffer column always fits VMEM);
 tokens ride in SMEM via ``PrefetchScalarGridSpec`` so the mask is computed
 on the scalar core before the vector pass.
+
+NOTE: the train path now prefers ``repro.kernels.gba_apply``, which fuses
+this reduction WITH the Adagrad update so the aggregated gradient never
+round-trips through HBM; this standalone kernel remains for tree-level
+aggregation (``ops.gba_aggregate_tree``) and non-Adagrad optimizers.
 """
 from __future__ import annotations
 

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused GBA aggregate-and-apply.
+
+The PS-side apply path of GBA (Alg. 2 lines 20/22 + the optimizer step)
+previously ran as two kernels with an HBM round-trip between them:
+``gba_aggregate`` reduced the (M, N) buffer to an aggregated gradient in
+HBM, then ``fused_adagrad`` read it back alongside param/accum.  This
+kernel merges both: for each N-block it computes the token-decay weights on
+the scalar core, reduces the buffer column in VMEM, and immediately applies
+the Adagrad update — the aggregated gradient never touches HBM.
+
+Per-block traffic: read M rows of the buffer + param + accum, write new
+param + accum — (M + 4) * BLOCK_N elements vs (M + 2) + (5) for the
+two-kernel chain, i.e. the fusion removes two full reads and one full
+write of an N-sized tensor per apply.
+
+Inputs are flat (N,) vectors — ``repro.core.gba.FlatLayout`` ravels a
+dense parameter pytree into exactly this shape so the whole apply is ONE
+kernel launch instead of a per-leaf chain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_N = 2048
+
+
+def _kernel(tokens_ref, step_ref, iota_ref, lr_ref, param_ref, accum_ref,
+            buf_ref, new_param_ref, new_accum_ref, *, eps: float):
+    """buf: (M, BLOCK_N) VMEM; param/accum: (BLOCK_N,); scalars in SMEM."""
+    m = buf_ref.shape[0]
+    keep = (step_ref[0] - tokens_ref[...]) <= iota_ref[0]     # Eq. (1)
+    w = keep.astype(jnp.float32) / jnp.float32(m)
+    g = jnp.sum(buf_ref[...].astype(jnp.float32) * w[:, None], axis=0)
+    a = accum_ref[...].astype(jnp.float32) + g * g
+    p = param_ref[...].astype(jnp.float32)
+    p = p - lr_ref[0] * g / (jnp.sqrt(a) + eps)
+    new_param_ref[...] = p.astype(new_param_ref.dtype)
+    new_accum_ref[...] = a
+
+
+@functools.partial(jax.jit, static_argnames=("iota", "eps", "interpret"))
+def gba_apply(param: jax.Array, accum: jax.Array, buffer: jax.Array,
+              tokens: jax.Array, step: jax.Array, lr: jax.Array, *,
+              iota: int, eps: float = 1e-10, interpret: bool = True
+              ) -> tuple[jax.Array, jax.Array]:
+    """Single-pass decay-aggregate + Adagrad apply.
+
+    param/accum: (N,), buffer: (M, N), tokens: (M,) ->
+    (new_param (N,), new_accum (N,)).  ``interpret=True`` runs the kernel
+    body on CPU (this container); pass False on real TPUs.
+    """
+    n = param.shape[0]
+    m = buffer.shape[0]
+    pad = (-n) % BLOCK_N
+    if pad:
+        param = jnp.pad(param, (0, pad))
+        accum = jnp.pad(accum, (0, pad))
+        buffer = jnp.pad(buffer, ((0, 0), (0, pad)))
+    n_pad = n + pad
+    grid = (n_pad // BLOCK_N,)
+
+    new_param, new_accum = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((BLOCK_N,), lambda i, *_: (i,)),
+                pl.BlockSpec((BLOCK_N,), lambda i, *_: (i,)),
+                pl.BlockSpec((m, BLOCK_N), lambda i, *_: (0, i)),
+            ],
+            out_specs=[
+                pl.BlockSpec((BLOCK_N,), lambda i, *_: (i,)),
+                pl.BlockSpec((BLOCK_N,), lambda i, *_: (i,)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), param.dtype),
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tokens.astype(jnp.int32),
+      jnp.asarray(step, jnp.int32).reshape(1),
+      jnp.full((1,), iota, jnp.int32),
+      jnp.asarray(lr, jnp.float32).reshape(1),
+      param, accum, buffer)
+    return new_param[:n], new_accum[:n]

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_grad
 from repro.kernels.fused_adagrad import fused_adagrad
 from repro.kernels.gba_aggregate import gba_aggregate
+from repro.kernels.gba_apply import gba_apply
 
 _INTERPRET = True
 
@@ -36,6 +37,18 @@ def gba_aggregate_tree(grads_stacked: Any, tokens: jax.Array,
         return out.reshape(g.shape[1:])
 
     return jax.tree.map(per_leaf, grads_stacked)
+
+
+def gba_apply_flat(param_flat: jax.Array, accum_flat: jax.Array,
+                   buffer: jax.Array, tokens: jax.Array, step: jax.Array,
+                   lr, *, iota: int, eps: float = 1e-10,
+                   interpret: bool | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Fused decay-aggregate + Adagrad over the flat (M, N) buffer — the
+    single-launch PS apply path (see repro.core.gba.FlatLayout)."""
+    return gba_apply(param_flat, accum_flat, buffer, tokens, step, lr,
+                     iota=iota, eps=eps,
+                     interpret=_INTERPRET if interpret is None else interpret)
 
 
 def adagrad_apply_tree(params: Any, grads: Any, accums: Any, lr

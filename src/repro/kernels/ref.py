@@ -38,3 +38,13 @@ def fused_adagrad_ref(param: jax.Array, grad: jax.Array, accum: jax.Array,
     a = accum.astype(jnp.float32) + g * g
     p = param.astype(jnp.float32) - lr * g / (jnp.sqrt(a) + eps)
     return p.astype(param.dtype), a
+
+
+def gba_apply_ref(param: jax.Array, accum: jax.Array, buffer: jax.Array,
+                  tokens: jax.Array, step: jax.Array, lr, *, iota: int,
+                  eps: float = 1e-10) -> tuple[jax.Array, jax.Array]:
+    """Two-pass oracle for the fused aggregate+apply: decayed mean over the
+    (M, N) buffer, then a plain Adagrad update of the flat params."""
+    agg = gba_aggregate_ref(buffer.astype(jnp.float32), tokens, step,
+                            iota=iota)
+    return fused_adagrad_ref(param, agg, accum, lr, eps=eps)

@@ -139,6 +139,67 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
     return train_step
 
 
+def init_fused_train_state(params: Any, gba: GBAConfig,
+                           initial_accum: float = 0.1):
+    """State for the fused flat-buffer GBA step: params stay a pytree (the
+    model consumes them), the Adagrad accumulator and the M-slot gradient
+    buffer live flat.  Returns (layout, state)."""
+    from repro.core.gba import init_flat_buffer
+    layout, buffer = init_flat_buffer(params, gba.buffer_size)
+    state = {
+        "params": params,
+        "accum": jnp.full((layout.total,), initial_accum, jnp.float32),
+        "buffer": buffer,
+    }
+    return layout, state
+
+
+def make_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
+                          lr: float = 1e-3, eps: float = 1e-10):
+    """Adagrad GBA step on the flat buffer: push the raveled gradient; on
+    the M-th microstep ONE ``gba_apply`` kernel launch does the token-decay
+    aggregation and the Adagrad update for the whole dense module (vs the
+    per-leaf aggregate -> optimizer XLA chain of ``make_train_step``).
+
+    Single-host / smoke-mesh shape: raveling concatenates all leaves, so
+    this step does not carry per-leaf shardings — the sharded production
+    path keeps ``make_train_step`` (a PS shard would run this per-shard).
+
+    The param ravel/unravel lives INSIDE the apply branch: the M-1
+    buffer-fill microsteps pay only the gradient ravel (which feeds the
+    buffer anyway), not two whole-model copies.
+    """
+    from repro.core.gba import flat_buffer_push
+    from repro.kernels import ops
+    iota = gba.staleness_tolerance
+
+    def train_step(state, batch, token):
+        loss, grads = jax.value_and_grad(_loss_from_batch)(
+            state["params"], cfg, batch)
+        new_buffer, is_full = flat_buffer_push(
+            state["buffer"], layout.ravel(grads), token)
+
+        def do_apply(operands):
+            params, accum, grads_buf, tokens, step = operands
+            flat_p, new_accum = ops.gba_apply_flat(
+                layout.ravel(params), accum, grads_buf, tokens, step, lr,
+                iota=iota, eps=eps)
+            return layout.unravel(flat_p), new_accum
+
+        def do_noop(operands):
+            params, accum, *_ = operands
+            return params, accum
+
+        params, accum = jax.lax.cond(
+            is_full, do_apply, do_noop,
+            (state["params"], state["accum"], new_buffer["grads"],
+             new_buffer["tokens"], state["buffer"]["step"]))
+        return {"params": params, "accum": accum,
+                "buffer": new_buffer}, loss
+
+    return train_step
+
+
 def opt_state_specs(optimizer: Optimizer, pspecs: Any) -> Any:
     if optimizer.name == "adam":
         return {"m": pspecs, "v": pspecs, "count": P()}

@@ -19,7 +19,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import GBAConfig
 from repro.data import make_lm_stream
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
-from repro.launch.steps import (ARCH_OPTIMIZER, init_train_state,
+from repro.launch.steps import (ARCH_OPTIMIZER, init_fused_train_state,
+                                init_train_state, make_fused_train_step,
                                 make_train_step)
 from repro.models import transformer as T
 from repro.optim import get_optimizer
@@ -36,9 +37,16 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--reduced", action="store_true",
                     help="smoke variant on the 1-device mesh (CPU)")
+    ap.add_argument("--fused", action="store_true",
+                    help="flat-buffer GBA + fused gba_apply kernel; "
+                         "FORCES Adagrad and a single-host flat state "
+                         "(implied for Adagrad archs with --reduced)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    # resolve the optimizer from the canonical name BEFORE .reduced()
+    # renames the config (…-smoke), so smoke runs match production
+    opt_name = ARCH_OPTIMIZER.get(cfg.name, "adam")
     if args.reduced:
         cfg = cfg.reduced()
         mesh = make_smoke_mesh()
@@ -48,14 +56,29 @@ def main() -> None:
     params = T.init_model(jax.random.PRNGKey(0), cfg)
     print(f"{cfg.name}: {T.param_count(params) / 1e6:.1f}M params, "
           f"mesh {dict(mesh.shape)}")
-    opt = get_optimizer(ARCH_OPTIMIZER.get(cfg.name, "adam"), args.lr)
+    # the fused flat buffer is single-host (no per-leaf shardings) and
+    # costs buffer_size f32 copies of the params: auto-enable only for
+    # Adagrad archs on the smoke mesh, explicit --fused elsewhere
+    fused = args.fused or (opt_name == "adagrad" and args.reduced)
+    if fused and opt_name != "adagrad":
+        print(f"--fused forces Adagrad (arch default was {opt_name})")
+    opt = get_optimizer(opt_name, args.lr)
     gba = GBAConfig(local_batch=args.batch, buffer_size=args.buffer,
                     staleness_tolerance=args.iota)
     stream = make_lm_stream(cfg.vocab_size, args.seq, args.batch, seed=0)
 
     with mesh:
-        step_fn = jax.jit(make_train_step(cfg, opt, gba), donate_argnums=0)
-        state = init_train_state(params, opt)
+        if fused:
+            layout, state = init_fused_train_state(params, gba)
+            step_fn = jax.jit(
+                make_fused_train_step(cfg, gba, layout, lr=args.lr),
+                donate_argnums=0)
+            print(f"fused gba_apply path (Adagrad): flat buffer "
+                  f"({gba.buffer_size}, {layout.total})")
+        else:
+            step_fn = jax.jit(make_train_step(cfg, opt, gba),
+                              donate_argnums=0)
+            state = init_train_state(params, opt)
         t0 = time.perf_counter()
         for i in range(args.steps):
             b = stream.batch(i)
@@ -72,8 +95,10 @@ def main() -> None:
             token = jnp.asarray(i // args.buffer, jnp.int32)
             state, loss = step_fn(state, batch, token)
             if i % 5 == 0 or i == args.steps - 1:
+                gstep = int(state["buffer"]["step"] if fused
+                            else state["gstep"])
                 print(f"step {i:4d}  loss {float(loss):.4f}  "
-                      f"gstep {int(state['gstep'])}  "
+                      f"gstep {gstep}  "
                       f"{(i + 1) * args.batch * args.seq /  (time.perf_counter() - t0):,.0f} tok/s")
 
 

@@ -13,6 +13,15 @@ from repro.models import transformer as T
 ARCHS = ["starcoder2-3b", "mamba2-780m", "zamba2-2.7b", "gemma2-27b",
          "llama-3.2-vision-11b", "granite-8b"]
 
+# the token-by-token variant of these archs costs 30-50s of jit compile
+# each on this container; the prefill+decode variant below exercises the
+# same cache mechanisms and stays in the default (<10 min) suite
+_SLOW_DECODE = {"zamba2-2.7b", "gemma2-27b", "llama-3.2-vision-11b"}
+_DECODE_PARAMS = [
+    pytest.param(a, marks=[pytest.mark.slow] if a in _SLOW_DECODE else [])
+    for a in ARCHS
+]
+
 
 def _setup(arch, window=8):
     cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
@@ -29,7 +38,7 @@ def _setup(arch, window=8):
     return cfg, params, toks, memory
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _DECODE_PARAMS)
 def test_decode_matches_forward(arch):
     cfg, params, toks, memory = _setup(arch)
     full, _ = T.forward(params, cfg, toks, memory=memory)

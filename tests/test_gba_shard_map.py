@@ -57,7 +57,10 @@ print(json.dumps({"err": err, "devices": jax.device_count()}))
 """
 
 
+@pytest.mark.slow
 def test_shard_map_gba_matches_reference():
+    """Marked slow: spawns a fresh 8-device jax process whose jit compile
+    alone runs minutes on a loaded CPU container (scripts/ci.sh budget)."""
     out = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",

@@ -81,9 +81,14 @@ def test_cache_specs_long_context_seq_sharding():
     """long_500k (batch=1): KV seq dim takes the data axis.  Uses an
     AbstractMesh so the production (16,16) geometry is testable on 1 CPU
     device (cache_specs only reads mesh.shape)."""
+    import inspect
     from jax.sharding import AbstractMesh
     cfg = get_config("gemma2-27b")
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    params = inspect.signature(AbstractMesh).parameters
+    if "shape_tuple" in params:      # jax<=0.4.x: one ((name, size), ...) arg
+        mesh = AbstractMesh((("data", 16), ("model", 16)))
+    else:                            # jax>=0.5: (sizes, names)
+        mesh = AbstractMesh((16, 16), ("data", "model"))
     cache = abstract_cache(cfg, 1, 1024)
     specs = S.cache_specs(cache, cfg, mesh, batch=1)
     k_spec = specs["blocks"]["l1"]["attn"]["k"]  # global layer
