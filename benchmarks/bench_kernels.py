@@ -7,19 +7,29 @@ Rows cover the kernels the train path actually launches:
 * ``gba_apply`` — the fused PS apply (decay-aggregate + Adagrad, one VMEM
   pass); the ref chain reads the buffer 3x (mask/mul/reduce) and round-trips
   the aggregated gradient through HBM before the optimizer pass.
-* ``embedding_bag_grad`` — the sort-based segment-reduce backward; the
-  derived columns record the grid parallelism (programs) vs the old
-  ``grid=(1,)`` serial scatter.
+* ``embedding_bag`` / ``embedding_bag_grad`` — the DMA-streamed sparse
+  module.  The ``vmem_bytes`` column is the double-buffered scratch
+  residency (2 table tiles + 2 entry chunks forward, 2 row chunks + 2 id
+  chunks backward): block-bounded and identical at V=100k and V=1M, while
+  the ``row_bytes``/``scatter_bytes`` HBM-traffic model stays at the PR-1
+  level because only touched tiles / sorted runs ever move.
+
+Rows whose kernel has been superseded on the train path (``gba_aggregate``
+by ``gba_apply``) are skipped by default so the JSON stops reporting a dead
+hot path as current; pass ``all_rows=True`` (CLI ``--all``) to include
+them, tagged ``status=superseded``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import csv_row, time_call
 from repro.kernels import ref
-from repro.kernels.embedding_bag import (BLOCK_V, embedding_bag,
-                                         embedding_bag_grad)
+from repro.kernels.embedding_bag import (BLOCK_D, BLOCK_V, CHUNK_E,
+                                         embedding_bag, embedding_bag_grad,
+                                         stream_vmem_bytes)
 from repro.kernels.fused_adagrad import fused_adagrad
 from repro.kernels.gba_aggregate import gba_aggregate
 from repro.kernels.gba_apply import gba_apply
@@ -27,7 +37,57 @@ from repro.kernels.gba_apply import gba_apply
 HBM_BW = 819e9
 
 
-def run() -> list[str]:
+def _embedding_rows(b, f, v, dim, tag, *, time_ref=True) -> list[str]:
+    """Forward + backward rows for one (B, F, V, D) sparse-module shape."""
+    rows = []
+    key = jax.random.PRNGKey(b + v)
+    ids = jax.random.randint(key, (b, f), 0, v)
+    table = jax.random.normal(key, (v, dim), jnp.float32)
+    vmem = stream_vmem_bytes(dim)
+    e = b * f
+    n_active = int(np.unique(np.asarray(ids) // BLOCK_V).size)
+
+    # forward: gather+pool with HBM-resident table; only the n_active
+    # touched (BLOCK_V, BLOCK_D) tiles are streamed (empty blocks never
+    # move), so tile traffic is id-bounded, not V-bounded
+    t_ref = (time_call(jax.jit(ref.embedding_bag_ref), ids, table, iters=5)
+             if time_ref else 0.0)
+    t_ker = time_call(embedding_bag, ids, table, iters=2)
+    traffic = b * f * dim * 4 + b * dim * 4
+    tile_bytes = n_active * BLOCK_V * vmem["block_d"] * 4
+    # the forward's only parallel grid axis is the D tiling (1 program for
+    # narrow tables); within a program vocab blocks run serially behind the
+    # double-buffered DMA — recorded so the JSON doesn't hide it
+    ndb = -(-dim // vmem["block_d"])
+    rows.append(csv_row(
+        f"kernel.embedding_bag.{tag}", t_ker,
+        f"ref_us={t_ref:.1f};row_bytes={traffic:.2e};"
+        f"tile_bytes={tile_bytes:.2e};vmem_bytes={vmem['fwd']};"
+        f"vmem_table_ratio={vmem['fwd'] / (v * dim * 4):.2e};"
+        f"grid_programs={ndb};serial_over=vocab_blocks_dma_overlapped;"
+        f"tpu_roofline_us={traffic / HBM_BW * 1e6:.2f};"
+        f"stream=hbm_tiles_double_buffered"))
+
+    # backward: sorted-scatter segment reduce, sorted (id, row) runs
+    # streamed in CHUNK_E chunks; traffic model unchanged from PR-1
+    gout = jax.random.normal(key, (b, dim), jnp.float32)
+    t_ref = (time_call(jax.jit(lambda i, g: ref.embedding_bag_grad_ref(
+        i, g, v)), ids, gout, iters=5) if time_ref else 0.0)
+    t_ker = time_call(lambda i, g: embedding_bag_grad(i, g, v),
+                      ids, gout, iters=2)
+    programs = (v + BLOCK_V - 1) // BLOCK_V
+    traffic = (e * (4 + dim * 4)          # sorted (id, row) stream read
+               + v * (dim * 4 + 4))       # table grads + counts written
+    rows.append(csv_row(
+        f"kernel.embedding_bag_grad.{tag}.sorted", t_ker,
+        f"ref_us={t_ref:.1f};grid_programs={programs};serial=0;"
+        f"scatter_bytes={traffic:.2e};vmem_bytes={vmem['bwd']};"
+        f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f};"
+        f"stream=hbm_runs_double_buffered"))
+    return rows
+
+
+def run(all_rows: bool = False) -> list[str]:
     rows = []
     key = jax.random.PRNGKey(0)
 
@@ -56,52 +116,30 @@ def run() -> list[str]:
         f"tpu_roofline_us={total_fused / HBM_BW * 1e6:.1f};"
         f"fusion=aggregate+adagrad_one_pass"))
 
-    # gba_aggregate: the standalone reduction (still behind
-    # ops.gba_aggregate_tree); the train path now prefers gba_apply
-    m, d = 16, 1 << 16
-    g = jax.random.normal(key, (m, d), jnp.bfloat16)
-    t_ref = time_call(jax.jit(lambda a, b, c: ref.gba_aggregate_ref(
-        a, b, c, iota=4)), g, toks, step, iters=5)
-    t_ker = time_call(lambda a, b, c: gba_aggregate(a, b, c, iota=4),
-                      g, toks, step, iters=2)
-    traffic = m * d * 2
-    rows.append(csv_row(
-        "kernel.gba_aggregate.16x64k.bf16", t_ker,
-        f"ref_us={t_ref:.1f};buffer_bytes={traffic:.2e};"
-        f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f};"
-        f"superseded_by=gba_apply"))
+    if all_rows:
+        # gba_aggregate: standalone reduction (still behind
+        # ops.gba_aggregate_tree) — superseded on the train path by
+        # gba_apply, so reported only on request
+        m, d = 16, 1 << 16
+        g = jax.random.normal(key, (m, d), jnp.bfloat16)
+        t_ref = time_call(jax.jit(lambda a, b, c: ref.gba_aggregate_ref(
+            a, b, c, iota=4)), g, toks, step, iters=5)
+        t_ker = time_call(lambda a, b, c: gba_aggregate(a, b, c, iota=4),
+                          g, toks, step, iters=2)
+        traffic = m * d * 2
+        rows.append(csv_row(
+            "kernel.gba_aggregate.16x64k.bf16", t_ker,
+            f"ref_us={t_ref:.1f};buffer_bytes={traffic:.2e};"
+            f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f};"
+            f"status=superseded;superseded_by=gba_apply"))
 
-    # embedding_bag: gather+pool fused
-    b, f, v, dim = 512, 26, 100_003, 16
-    ids = jax.random.randint(key, (b, f), 0, v)
-    table = jax.random.normal(key, (v, dim), jnp.float32)
-    t_ref = time_call(jax.jit(ref.embedding_bag_ref), ids, table, iters=5)
-    t_ker = time_call(embedding_bag, ids, table, iters=2)
-    traffic = b * f * dim * 4 + b * dim * 4
-    rows.append(csv_row(
-        "kernel.embedding_bag.512x26", t_ker,
-        f"ref_us={t_ref:.1f};row_bytes={traffic:.2e};"
-        f"tpu_roofline_us={traffic / HBM_BW * 1e6:.2f}"))
-
-    # embedding_bag_grad: sorted-scatter backward.  The old kernel was a
-    # single serial program; the sort-based segment reduce grids over
-    # vocab blocks with disjoint outputs.
-    gb, gf, gv, gd = 256, 26, 20_011, 16
-    gids = jax.random.randint(key, (gb, gf), 0, gv)
-    gout = jax.random.normal(key, (gb, gd), jnp.float32)
-    t_ref = time_call(jax.jit(lambda i, g: ref.embedding_bag_grad_ref(
-        i, g, gv)), gids, gout, iters=5)
-    t_ker = time_call(lambda i, g: embedding_bag_grad(i, g, gv),
-                      gids, gout, iters=2)
-    e = gb * gf
-    programs = (gv + BLOCK_V - 1) // BLOCK_V
-    traffic = (e * (4 + gd * 4)          # sorted (id, row) stream read
-               + gv * (gd * 4 + 4))      # table grads + counts written
-    rows.append(csv_row(
-        "kernel.embedding_bag_grad.256x26.sorted", t_ker,
-        f"ref_us={t_ref:.1f};grid_programs={programs};serial=0;"
-        f"scatter_bytes={traffic:.2e};"
-        f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f}"))
+    # streamed sparse module at the PR-1 shapes (baseline continuity) ...
+    rows += _embedding_rows(512, 26, 100_003, 16, "512x26")
+    rows += _embedding_rows(256, 26, 20_011, 16, "256x26")
+    # ... and at a production-scale vocabulary: same vmem_bytes column as
+    # above (block-bounded), ~50x the table size.  The jnp oracle would
+    # materialize (1M, D) scatter buffers per call — timed rows only.
+    rows += _embedding_rows(64, 26, 1_000_000, 16, "1M", time_ref=False)
 
     # fused_adagrad: 3 reads + 2 writes in one pass
     n = 1 << 18
@@ -121,5 +159,9 @@ def run() -> list[str]:
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true",
+                    help="include superseded kernel rows")
+    for r in run(all_rows=ap.parse_args().all):
         print(r)

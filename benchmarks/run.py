@@ -2,11 +2,17 @@
 roofline).  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6,tab52] [--fast]
-        [--json [PATH]]
+        [--json [PATH]] [--check [BASELINE]] [--all]
 
 ``--json`` additionally writes the kernel + roofline rows (with the derived
 ``k=v`` columns parsed into numbers) to ``BENCH_kernels.json`` so the perf
 trajectory is machine-readable across PRs.
+
+``--check`` compares the fresh kernel/roofline rows against a committed
+baseline JSON (default ``BENCH_kernels.json``) and exits non-zero on a
+>1.5x ``us_per_call`` regression, any growth of a ``vmem_bytes`` or
+``buffer_ratio`` column, or a baseline row that disappeared — the CI perf
+gate (scripts/ci.sh).  ``--all`` includes rows for superseded kernels.
 """
 from __future__ import annotations
 
@@ -17,6 +23,8 @@ import time
 import traceback
 
 JSON_SUITES = ("kernels", "roofline")
+US_REGRESSION = 1.5           # --check: max allowed us_per_call growth
+MONOTONE_COLS = ("vmem_bytes", "buffer_ratio")   # --check: no growth at all
 
 
 def parse_derived(derived: str) -> dict:
@@ -47,6 +55,43 @@ def rows_to_json(collected: dict[str, list[str]]) -> list[dict]:
     return records
 
 
+def check_records(fresh: list[dict], baseline_path: str) -> list[str]:
+    """Compare fresh kernel rows to the committed baseline; return the list
+    of human-readable failures (empty = gate passes).
+
+    Superseded rows absent from a fresh default run are not counted as
+    disappeared when the baseline tagged them ``status=superseded``.
+    """
+    try:
+        with open(baseline_path) as f:
+            baseline = {r["name"]: r for r in json.load(f)}
+    except FileNotFoundError:
+        return [f"baseline {baseline_path} not found"]
+    fresh_by_name = {r["name"]: r for r in fresh}
+    failures = []
+    for name, base in baseline.items():
+        cur = fresh_by_name.get(name)
+        if cur is None:
+            if base.get("status") == "superseded":
+                continue
+            failures.append(f"{name}: present in baseline, missing fresh")
+            continue
+        b_us, c_us = base.get("us_per_call", 0.0), cur.get("us_per_call", 0.0)
+        if b_us > 0 and c_us > US_REGRESSION * b_us:
+            failures.append(
+                f"{name}: us_per_call {c_us:.1f} > {US_REGRESSION}x "
+                f"baseline {b_us:.1f}")
+        for col in MONOTONE_COLS:
+            if col in base and isinstance(base[col], float):
+                c_val = cur.get(col)
+                if c_val is None:
+                    failures.append(f"{name}: {col} column disappeared")
+                elif c_val > base[col]:
+                    failures.append(
+                        f"{name}: {col} grew {base[col]:g} -> {c_val:g}")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
@@ -57,6 +102,12 @@ def main() -> None:
                     default="",
                     help="write kernel/roofline rows as JSON "
                          "(default BENCH_kernels.json)")
+    ap.add_argument("--check", nargs="?", const="BENCH_kernels.json",
+                    default="",
+                    help="fail on perf/footprint regressions vs a baseline "
+                         "JSON (default BENCH_kernels.json)")
+    ap.add_argument("--all", action="store_true",
+                    help="include rows for superseded kernels")
     args = ap.parse_args()
 
     from benchmarks import (bench_autoswitch, bench_convergence,
@@ -85,7 +136,7 @@ def main() -> None:
             eval_days=1 if args.fast else 2)),
         ("decay", lambda: bench_decay_ablation.run(
             base_days=3 if args.fast else 6)),
-        ("kernels", bench_kernels.run),
+        ("kernels", lambda: bench_kernels.run(all_rows=args.all)),
         ("roofline", roofline.run),
     ]
     selected = [s for s in args.only.split(",") if s]
@@ -107,9 +158,17 @@ def main() -> None:
             failures += 1
             print(f"suite.{name},0.0,FAILED", flush=True)
             traceback.print_exc()
+    records = rows_to_json(
+        {k: v for k, v in collected.items() if k in JSON_SUITES})
+    if args.check:
+        problems = check_records(records, args.check)
+        for p in problems:
+            print(f"check.FAIL,0.0,{p}", flush=True)
+        if problems:
+            sys.exit(1)
+        print(f"check.ok,0.0,baseline={args.check};rows={len(records)}",
+              flush=True)
     if args.json:
-        records = rows_to_json(
-            {k: v for k, v in collected.items() if k in JSON_SUITES})
         with open(args.json, "w") as f:
             json.dump(records, f, indent=2)
         print(f"suite.json,0.0,wrote={args.json};rows={len(records)}",

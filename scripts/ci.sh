@@ -4,13 +4,15 @@
 #   scripts/ci.sh
 #
 # Runs the full test suite (property tests auto-skip when hypothesis is
-# absent; heavy replay tests are deselected by default via pytest.ini) and
-# the kernel micro-benchmarks, leaving BENCH_kernels.json for the perf
-# trajectory.
+# absent; heavy replay tests are deselected by default via pytest.ini),
+# then the kernel micro-benchmarks in --check mode: fresh rows are gated
+# against the committed BENCH_kernels.json (>1.5x us_per_call regression
+# or any vmem_bytes/buffer_ratio growth fails the run) before the fresh
+# JSON is written for the perf trajectory.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -q
-python -m benchmarks.run --only kernels --fast --json BENCH_kernels.json
+python -m benchmarks.run --only kernels --fast --check --json BENCH_kernels.json

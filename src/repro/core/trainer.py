@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.configs.recsys import RecsysConfig
 from repro.data.clickstream import ClickStream
+from repro.embeddings.table import StreamConfig, presence_counts
 from repro.metrics import StreamingAUC
 from repro.models import recsys as R
 from repro.optim import Optimizer
@@ -84,6 +85,10 @@ class GBATrainer:
     iota: int = 4
     per_id_embedding_decay: bool = True   # Alg. 2 lines 21/23
     history: int = 64
+    # production-capacity knob: when set, the per-slot presence counts come
+    # from the streamed sorted-scatter kernel (O(block) VMEM at any
+    # hash_capacity) instead of an XLA one-hot scatter per slot
+    embed_stream: StreamConfig | None = None
 
     def __post_init__(self):
         self._loss_grad_fn = jax.value_and_grad(
@@ -131,9 +136,20 @@ class GBATrainer:
 
             # sparse module: per-ID treatment (Alg. 2 lines 21/23)
             ids_all = self._flat_ids(batches, m)
-            present = jax.vmap(
-                lambda ids: jnp.zeros((cap,), jnp.float32).at[ids].add(1.0)
-            )(ids_all)
+            if self.embed_stream is not None:
+                # streamed counts: offsetting slot i's ids by i*cap turns
+                # the M per-slot histograms into ONE sorted-scatter kernel
+                # launch over an (M*cap)-row id space — a single sort, no
+                # XLA one-hot scatter, O(block) VMEM at any capacity
+                slot_offset = (jnp.arange(m, dtype=jnp.int32) * cap)[:, None]
+                present = presence_counts(
+                    ids_all + slot_offset, m * cap,
+                    stream=self.embed_stream).reshape(m, cap)
+            else:
+                present = jax.vmap(
+                    lambda ids: jnp.zeros((cap,),
+                                          jnp.float32).at[ids].add(1.0)
+                )(ids_all)
             touched01 = (present > 0).astype(jnp.float32)       # (M, cap)
             rescued = jnp.int32(0)
             if gba:

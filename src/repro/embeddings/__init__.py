@@ -1,6 +1,8 @@
-from repro.embeddings.table import (EmbeddingTable, apply_sparse_grads,
-                                    hash_ids, init_table, lookup,
+from repro.embeddings.table import (EmbeddingTable, StreamConfig,
+                                    apply_sparse_grads, hash_ids, init_table,
+                                    lookup, pooled_lookup, presence_counts,
                                     sparse_grads_to_dense)
 
-__all__ = ["EmbeddingTable", "apply_sparse_grads", "hash_ids", "init_table",
-           "lookup", "sparse_grads_to_dense"]
+__all__ = ["EmbeddingTable", "StreamConfig", "apply_sparse_grads",
+           "hash_ids", "init_table", "lookup", "pooled_lookup",
+           "presence_counts", "sparse_grads_to_dense"]

@@ -5,13 +5,23 @@ IDs are hashed into a fixed-capacity table; each row carries the global step
 of its last update (``last_update``), which implements Algorithm 2's per-ID
 staleness decay — the embedding gradient of an ID is decayed against the
 step *that ID* last saw, not the dense-parameter step.
+
+``pooled_lookup`` is the kernel-backed sparse module: a differentiable
+sum-pooled gather whose forward streams (BLOCK_V, BLOCK_D) table tiles out
+of HBM and whose backward streams the sorted gradient rows — VMEM stays
+O(block) at any capacity (``repro.kernels.embedding_bag``).  The capacity
+knobs travel as a :class:`StreamConfig` so trainers and launch scripts can
+size the blocks for their vocabulary.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 Params = dict[str, Any]
 
@@ -40,6 +50,82 @@ def hash_ids(raw_ids: jax.Array, capacity: int) -> jax.Array:
 def lookup(tbl: EmbeddingTable, hashed_ids: jax.Array) -> jax.Array:
     """hashed_ids: (...,) int32 -> (..., dim)."""
     return tbl.table[hashed_ids]
+
+
+class StreamConfig(NamedTuple):
+    """Capacity knobs for the DMA-streamed embedding kernels.
+
+    ``None`` fields fall back to the kernel-module defaults (BLOCK_V /
+    BLOCK_D / CHUNK_E).  Hashable on purpose: it rides through
+    ``jax.custom_vjp`` as a nondiff argument and through jit static args.
+    """
+    block_v: int | None = None   # vocab rows per streamed table tile
+    block_d: int | None = None   # embedding columns per output tile
+    chunk_e: int | None = None   # sorted entries per pipeline step
+    interpret: bool | None = None
+
+
+class _BagMeta(NamedTuple):
+    """Static (hashable) side-channel for the custom VJP: the backward
+    kernel needs the table's capacity/dtype, which residuals can't carry."""
+    stream: StreamConfig
+    capacity: int
+    dtype: str
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _pooled_bag(table: jax.Array, hashed_ids: jax.Array,
+                meta: _BagMeta) -> jax.Array:
+    s = meta.stream
+    return ops.pooled_lookup(hashed_ids, table, block_v=s.block_v,
+                             block_d=s.block_d, chunk_e=s.chunk_e,
+                             interpret=s.interpret)
+
+
+def _pooled_bag_fwd(table, hashed_ids, meta):
+    return _pooled_bag(table, hashed_ids, meta), hashed_ids
+
+
+def _pooled_bag_bwd(meta, hashed_ids, g):
+    # VJP of sum-pool = unnormalized scatter-add of g rows; the per-ID
+    # counts the kernel co-produces belong to Alg. 2's aggregation rule,
+    # not to autodiff — they are recomputed where needed (presence_counts)
+    s = meta.stream
+    gtable, _ = ops.pooled_lookup_grad(
+        hashed_ids, g.astype(jnp.float32), meta.capacity, block_v=s.block_v,
+        block_d=s.block_d, chunk_e=s.chunk_e, interpret=s.interpret)
+    return gtable.astype(meta.dtype), jnp.zeros(hashed_ids.shape,
+                                                jax.dtypes.float0)
+
+
+_pooled_bag.defvjp(_pooled_bag_fwd, _pooled_bag_bwd)
+
+
+def pooled_lookup(tbl: EmbeddingTable, hashed_ids: jax.Array, *,
+                  stream: StreamConfig | None = None) -> jax.Array:
+    """Differentiable sum-pooled lookup: (B, F) int32 -> (B, dim).
+
+    Forward and backward are the streamed Pallas kernels — the (capacity,
+    dim) table never materializes a VMEM-resident block, so this is the
+    production-vocabulary path (10^6+ rows)."""
+    meta = _BagMeta(stream or StreamConfig(), tbl.table.shape[0],
+                    str(tbl.table.dtype))
+    return _pooled_bag(tbl.table, hashed_ids, meta)
+
+
+def presence_counts(hashed_ids: jax.Array, capacity: int, *,
+                    stream: StreamConfig | None = None) -> jax.Array:
+    """Per-ID occurrence counts of a batch of hashed IDs: (...,) int32 ->
+    (capacity,) float32, via the streamed sorted-scatter kernel's counts
+    output — O(block) VMEM at any capacity, unlike an XLA one-hot
+    scatter which materializes the (capacity,)-wide one-hot adds."""
+    s = stream or StreamConfig()
+    ids2d = hashed_ids.reshape(1, -1)
+    zero_rows = jnp.zeros((1, 1), jnp.float32)
+    _, counts = ops.pooled_lookup_grad(
+        ids2d, zero_rows, capacity, block_v=s.block_v, block_d=s.block_d,
+        chunk_e=s.chunk_e, interpret=s.interpret)
+    return counts
 
 
 def sparse_grads_to_dense(ids: jax.Array, rows: jax.Array, capacity: int

@@ -2,11 +2,17 @@
 
 Layout of the package:
 
-* ``embedding_bag``  — pooled lookup forward; **sorted-scatter** backward:
-  the B*F (id, row) pairs are sorted by id once, per-vocab-block segment
-  boundaries come from a searchsorted, and the grid runs one program per
-  disjoint (BLOCK_V, D) output block — parallel, race-free, with per-ID
-  contributor counts produced in the same pass (Alg. 2 line 23).
+* ``embedding_bag``  — pooled lookup forward + **sorted-scatter** backward,
+  both **DMA-streamed**: the (V, D) table and the sorted (E, D) gradient
+  rows live in HBM (``pltpu.ANY``) and move through double-buffered VMEM
+  scratch blocks with ``pltpu.make_async_copy``, so VMEM residency is
+  O(block_v * block_d + chunk_e * block_d) at any vocabulary size.  The
+  B*F (id, row) pairs are sorted by id once, per-vocab-block segment
+  boundaries come from a searchsorted, and the backward grid runs one
+  program per disjoint (BLOCK_V, BLOCK_D) output tile — parallel,
+  race-free, with per-ID contributor counts produced in the same pass
+  (Alg. 2 line 23).  The PR-1 whole-array-in-VMEM backward survives as
+  ``embedding_bag_grad_resident``, a bit-exactness regression oracle.
 * ``gba_apply``      — the fused PS apply: token-decay aggregation over the
   flat (M, N_total) gradient buffer AND the Adagrad update in one VMEM
   pass; fed by ``repro.core.gba.FlatLayout`` (dense pytree leaves raveled
@@ -15,10 +21,12 @@ Layout of the package:
   for tree-level use, superseded on the train path by ``gba_apply``.
 * ``fused_adagrad``  — standalone one-pass Adagrad; same story.
 * ``flash_decode``   — decode-time attention for the serving stack.
-* ``ops``            — jit'd wrappers + the global interpret-mode switch.
+* ``ops``            — jit'd wrappers with per-call ``interpret=`` control.
+* ``runtime``        — interpret-mode resolution (platform default, env
+  var ``REPRO_INTERPRET``, ``set_interpret``).
 
 Every kernel has an allclose oracle in ``ref`` and a parity sweep in
-``tests/test_kernels.py``.  Remaining gaps (ROADMAP "Open items"): tables
-larger than VMEM need DMA-streamed rows, and the kernels have only been
-validated in interpret mode in this container, not on real TPUs.
+``tests/test_kernels.py`` (+ ``tests/test_embedding_stream.py`` for the
+streamed paths).  Remaining gap (ROADMAP "Open items"): the kernels have
+only been validated in interpret mode in this container, not on real TPUs.
 """

@@ -1,29 +1,46 @@
-"""Pallas TPU kernels: pooled hash-embedding lookup + sorted-scatter grad.
+"""Pallas TPU kernels: pooled hash-embedding lookup + sorted-scatter grad,
+with HBM-resident tables and double-buffered DMA block streaming.
 
 The compute hot-spot of the paper's recommendation workloads is the sparse
 module: per-batch gather of F rows per example (forward) and the per-ID
-normalized scatter-add (backward, Alg. 2 line 23).
+normalized scatter-add (backward, Alg. 2 line 23).  Production vocabularies
+(10^6-10^8 hashed IDs) never fit a ``(V, D)`` VMEM block, so both kernels
+keep the big arrays in HBM (``pltpu.ANY`` memory space) and stream
+fixed-size blocks through a 2-deep VMEM scratch pipeline with
+``pltpu.make_async_copy``: the DMA of block ``c+1`` overlaps the compute of
+block ``c``, and the VMEM footprint is O(block) — independent of the
+vocabulary size ``V`` and the entry count ``E = B*F``.
 
-TPU adaptation (DESIGN.md §2): instead of the PS's host-side hash lookup we
-tile the batch over the grid and keep the table in VMEM blocks (tables are
-model-axis sharded, so per-core slices are VMEM-sized for the scaled
-configs; production tables would stream rows by DMA — noted, not modeled).
+* forward: the B*F (id, batch_row) entries are sorted by id ONCE on the
+  XLA side and bucketed into ``BLOCK_V``-row vocab blocks (searchsorted
+  segment offsets — the same sort machinery the backward uses).  A
+  precomputed (block, chunk) step schedule drives one fused pipeline per
+  ``BLOCK_D`` output tile: each step DMAs the next ``(BLOCK_V, BLOCK_D)``
+  table tile (only when the block changes — empty blocks are never
+  streamed) and the next ``CHUNK_E`` entry chunk, then pools the current
+  chunk into the ``(B, BLOCK_D)`` accumulator as two MXU matmuls
+  (gather-as-matmul ``(E, V_blk) @ (V_blk, D_blk)`` followed by the
+  batch-row scatter ``(E, B)^T @ (E, D_blk)``) — no dynamic VMEM gathers.
+  The D tiling is the forward's only parallel grid axis; vocab blocks run
+  serially inside a program, hidden behind the DMA overlap — the kernel is
+  HBM-bound, so the pipeline, not program count, is the throughput lever
+  (the bench rows record ``grid_programs`` to keep this visible).
 
-* forward: grid over batch blocks; each program gathers F rows per example
-  and sum-pools them: ids (Bblk, F) + table (V, D) -> out (Bblk, D).
+* backward: **sort-based segment reduce** over disjoint ``(BLOCK_V,
+  BLOCK_D)`` output tiles (grid = vocab blocks x D blocks, race-free,
+  fully parallel).  Each program streams its contiguous run of sorted
+  (id, row) entries in ``CHUNK_E``-sized chunks through the double
+  buffer and reduces them as a one-hot matmul
+  ``(CHUNK_E, BLOCK_V)^T @ (CHUNK_E, BLOCK_D)``; per-ID contributor
+  counts (Alg. 2 line 23) fall out of the same one-hot reduction.
 
-* backward: **sort-based segment reduce** instead of a serial scatter.
-  Scatter targets collide, so a naive grid over (batch x field) would race
-  on the output rows.  We instead sort the B*F (id, row) pairs by id ONCE
-  on the host side of the kernel (XLA sort), compute per-vocab-block
-  segment boundaries with a searchsorted, and grid over vocab blocks: each
-  program owns a disjoint (BLOCK_V, D) slice of the gradient table and
-  consumes only its own contiguous run of sorted entries, so there are no
-  races and the grid is fully parallel.  Within a program the run is
-  processed in CHUNK_E-sized chunks as a one-hot matmul
-  (CHUNK_E, BLOCK_V)^T @ (CHUNK_E, D) — MXU-shaped, not element-at-a-time —
-  and the per-ID contributor counts fall out of the same one-hot reduction
-  in the same pass.
+Batch rows the caller padded (and any other out-of-range id) are mapped to
+a sentinel id ``>= V_pad`` that sorts past the last block boundary, so they
+issue no DMA traffic at all — previously they gathered row 0.
+
+``embedding_bag_grad_resident`` keeps the PR-1 whole-array-in-VMEM
+backward as a regression oracle: the streamed kernel reproduces it
+bit-for-bit on the old (VMEM-sized) configs.
 """
 from __future__ import annotations
 
@@ -34,57 +51,398 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-BLOCK_B = 256
-BLOCK_V = 512      # vocab rows owned by one backward program
-CHUNK_E = 256      # sorted (id, row) entries consumed per inner step
+from repro.kernels import runtime
+
+BLOCK_V = 512      # vocab rows per streamed table tile / backward out block
+CHUNK_E = 256      # sorted (id, row) entries consumed per pipeline step
+BLOCK_D = 128      # embedding columns per output tile (wide-D streaming)
 
 
-def _fwd_kernel(ids_ref, table_ref, out_ref):
-    """ids: (BLOCK_B, F) int32; table: (V, D); out: (BLOCK_B, D)."""
-    f = ids_ref.shape[1]
+def _round_up(x: int, m: int) -> int:
+    return x + (-x) % m
 
-    def body(j, acc):
-        rows = table_ref[ids_ref[:, j], :]         # (BLOCK_B, D) gather
-        return acc + rows.astype(jnp.float32)
 
-    acc = jax.lax.fori_loop(
-        0, f, body, jnp.zeros(out_ref.shape, jnp.float32))
+def _block_d(d: int, block_d: int) -> int:
+    """Effective D tile: no padding for narrow tables (keeps the streamed
+    backward bit-identical to the resident kernel), BLOCK_D tiles else."""
+    return d if d <= block_d else block_d
+
+
+def stream_vmem_bytes(d: int, *, table_itemsize: int = 4,
+                      row_itemsize: int = 4, block_v: int = BLOCK_V,
+                      block_d: int = BLOCK_D, chunk_e: int = CHUNK_E
+                      ) -> dict[str, int]:
+    """Derived VMEM residency of the streamed pipelines (double-buffered
+    scratch only — the V- and E-sized arrays stay in HBM).  This is the
+    block-bounded footprint the bench rows record as ``vmem_bytes``."""
+    bd = _block_d(d, block_d)
+    return {
+        # 2 table tiles + 2 (id, batch_row) entry chunks
+        "fwd": 2 * block_v * bd * table_itemsize + 2 * 2 * chunk_e * 4,
+        # 2 gradient-row chunks + 2 id chunks
+        "bwd": 2 * chunk_e * bd * row_itemsize + 2 * chunk_e * 4,
+        "block_d": bd,
+    }
+
+
+# ---------------------------------------------------------------------------
+# shared XLA-side sort machinery
+# ---------------------------------------------------------------------------
+
+def _sorted_entries(ids: jax.Array, capacity: int, block_v: int,
+                    chunk_e: int):
+    """Bucket the B*F flat ids into ``block_v``-row sorted runs.
+
+    Returns ``(sorted_ids, order, offsets, cap_pad, nvb)``: ids sorted and
+    padded so ``chunk_e``-wide slices never run off the end, the argsort
+    permutation (for gathering per-entry payloads), and per-block run
+    boundaries.  Out-of-range ids — including any batch padding the caller
+    added — map to the sentinel ``cap_pad``, which sorts past the last
+    block boundary: no run contains them, no DMA ever moves their payload.
+    """
+    e = ids.size
+    flat = ids.reshape(-1).astype(jnp.int32)
+    cap_pad = _round_up(capacity, block_v)
+    flat = jnp.where((flat >= 0) & (flat < capacity), flat, cap_pad)
+    order = jnp.argsort(flat)
+    sorted_ids = flat[order]
+    nvb = cap_pad // block_v
+    boundaries = jnp.arange(nvb + 1, dtype=jnp.int32) * block_v
+    offsets = jnp.searchsorted(sorted_ids, boundaries).astype(jnp.int32)
+    e_pad = e + ((-e) % chunk_e) + chunk_e
+    sorted_ids = jnp.pad(sorted_ids, (0, e_pad - e),
+                         constant_values=cap_pad)
+    return sorted_ids, order, offsets, cap_pad, nvb
+
+
+# ---------------------------------------------------------------------------
+# forward: streamed pooled lookup
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(nsteps_ref, offsets_ref, sblk_ref, sp0_ref,
+                entries_hbm, table_hbm, out_ref,
+                tile_buf, ent_buf, tile_sem, ent_sem, *,
+                block_v: int, chunk_e: int):
+    """One fused (tile-DMA | entry-DMA | pool) pipeline per D tile.
+
+    nsteps_ref:  (1,) SMEM       — live steps in the schedule
+    offsets_ref: (nvb+1,) SMEM   — sorted-run boundaries per vocab block
+    sblk_ref:    (S,) SMEM       — vocab block of each pipeline step
+    sp0_ref:     (S,) SMEM       — absolute entry offset of each step
+    entries_hbm: (2, E_pad) HBM  — row 0 sorted ids, row 1 batch rows
+    table_hbm:   (V_pad, D_pad) HBM
+    out_ref:     (B_pad, BLOCK_D) VMEM output tile
+    tile_buf:    (2, BLOCK_V, BLOCK_D) VMEM — double-buffered table tiles
+    ent_buf:     (2, 2, CHUNK_E) VMEM       — double-buffered entry chunks
+    """
+    j = pl.program_id(0)
+    n = nsteps_ref[0]
+    bp, bd = out_ref.shape
+    v_rows = table_hbm.shape[0]
+
+    def tile_start(blk):
+        # the last block's tile is clamped instead of padding the table:
+        # its run only holds ids in [blk*block_v, v), all >= the clamped
+        # start, so the local one-hot still matches exactly
+        return jnp.minimum(blk * block_v, v_rows - block_v)
+
+    def tile_dma(slot, blk):
+        return pltpu.make_async_copy(
+            table_hbm.at[pl.ds(tile_start(blk), block_v), pl.ds(j * bd, bd)],
+            tile_buf.at[slot], tile_sem.at[slot])
+
+    def ent_dma(slot, p0):
+        return pltpu.make_async_copy(
+            entries_hbm.at[:, pl.ds(p0, chunk_e)],
+            ent_buf.at[slot], ent_sem.at[slot])
+
+    @pl.when(n > 0)
+    def _():
+        tile_dma(0, sblk_ref[0]).start()
+        ent_dma(0, sp0_ref[0]).start()
+
+    vids = jax.lax.broadcasted_iota(jnp.int32, (chunk_e, block_v), 1)
+    brows = jax.lax.broadcasted_iota(jnp.int32, (chunk_e, bp), 1)
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, (chunk_e, 1), 0)[:, 0]
+
+    def body(s, carry):
+        acc, tslot, prev_blk = carry
+        blk = sblk_ref[s]
+        p0 = sp0_ref[s]
+        end = offsets_ref[blk + 1]
+        load = blk != prev_blk
+        tslot = jnp.where(load, 1 - tslot, tslot)
+
+        # prefetch step s+1 while step s computes: the entry chunk always,
+        # the table tile only when s+1 crosses into a new vocab block
+        @pl.when(s + 1 < n)
+        def _():
+            ent_dma((s + 1) % 2, sp0_ref[s + 1]).start()
+
+            @pl.when(sblk_ref[s + 1] != blk)
+            def _():
+                tile_dma(1 - tslot, sblk_ref[s + 1]).start()
+
+        @pl.when(load)
+        def _():
+            tile_dma(tslot, blk).wait()
+        ent_dma(s % 2, p0).wait()
+
+        idx = ent_buf[s % 2, 0, :] - tile_start(blk)     # tile-local ids
+        brow = ent_buf[s % 2, 1, :]
+        valid = (p0 + pos_iota) < end
+        onehot_v = ((idx[:, None] == vids)
+                    & valid[:, None]).astype(jnp.float32)  # (E, V_blk)
+        gathered = jax.lax.dot_general(                    # gather-as-matmul
+            onehot_v, tile_buf[tslot].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (E, D_blk)
+        onehot_b = ((brow[:, None] == brows)
+                    & valid[:, None]).astype(jnp.float32)  # (E, B)
+        acc = acc + jax.lax.dot_general(
+            onehot_b, gathered, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (B, D_blk)
+        return acc, tslot, blk
+
+    acc, _, _ = jax.lax.fori_loop(
+        0, n, body,
+        (jnp.zeros((bp, bd), jnp.float32), jnp.int32(1), jnp.int32(-1)))
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def embedding_bag(ids: jax.Array, table: jax.Array, *,
-                  interpret: bool = True) -> jax.Array:
-    """ids: (B, F) int32, table: (V, D) -> pooled (B, D)."""
+@functools.partial(
+    jax.jit, static_argnames=("block_v", "block_d", "chunk_e", "interpret"))
+def _embedding_bag_streamed(ids: jax.Array, table: jax.Array, *,
+                            block_v: int, block_d: int, chunk_e: int,
+                            interpret: bool) -> jax.Array:
     b, f = ids.shape
     v, d = table.shape
-    pad = (-b) % BLOCK_B
-    if pad:
-        ids = jnp.pad(ids, ((0, pad), (0, 0)))
-    bp = b + pad
+    bd = _block_d(d, block_d)
+    d_pad = _round_up(d, bd)
+    # tables keep their HBM layout: the last tile's DMA start is clamped in
+    # the kernel, so padding is only needed for sub-block tables (rows) and
+    # wide non-multiple D (cols) — never for the production V >> block_v
+    row_pad = block_v - v if v < block_v else 0
+    if row_pad or d_pad != d:
+        table = jnp.pad(table, ((0, row_pad), (0, d_pad - d)))
+
+    e = b * f
+    sorted_ids, order, offsets, _, nvb = _sorted_entries(
+        ids, v, block_v, chunk_e)
+    e_pad = sorted_ids.shape[0]
+    entries = jnp.stack([
+        sorted_ids,
+        jnp.pad((order // f).astype(jnp.int32), (0, e_pad - e))
+    ])                                                    # (2, E_pad)
+
+    # (block, chunk) step schedule: empty blocks contribute no steps, so
+    # only tiles with at least one id are ever streamed
+    lens = offsets[1:] - offsets[:-1]
+    nchunks = (lens + chunk_e - 1) // chunk_e             # per block
+    s_max = nvb + e // chunk_e              # sum(nchunks) can't exceed this
+    n_steps = jnp.sum(nchunks).astype(jnp.int32)
+    first_step = jnp.cumsum(nchunks) - nchunks
+    step_blk = jnp.repeat(jnp.arange(nvb, dtype=jnp.int32), nchunks,
+                          total_repeat_length=s_max)
+    chunk_in_blk = jnp.arange(s_max, dtype=jnp.int32) - first_step[step_blk]
+    step_p0 = offsets[step_blk] + chunk_in_blk * chunk_e
+
+    bp = _round_up(b, 8)
     out = pl.pallas_call(
-        _fwd_kernel,
-        grid=(bp // BLOCK_B,),
-        in_specs=[
-            pl.BlockSpec((BLOCK_B, f), lambda i: (i, 0)),
-            pl.BlockSpec((v, d), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, d), table.dtype),
+        functools.partial(_fwd_kernel, block_v=block_v, chunk_e=chunk_e),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(d_pad // bd,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),     # entries
+                pl.BlockSpec(memory_space=pltpu.ANY),     # table
+            ],
+            out_specs=pl.BlockSpec((bp, bd), lambda j, *_: (0, j)),
+            scratch_shapes=[
+                pltpu.VMEM((2, block_v, bd), table.dtype),
+                pltpu.VMEM((2, 2, chunk_e), jnp.int32),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bp, d_pad), table.dtype),
         interpret=interpret,
-    )(ids, table)
-    return out[:b]
+    )(jnp.reshape(n_steps, (1,)), offsets, step_blk, step_p0,
+      entries, table)
+    return out[:b, :d]
 
 
-def _bwd_kernel(offsets_ref, ids_ref, rows_ref, gtable_ref, counts_ref):
-    """Segment reduce for one vocab block.
+def embedding_bag(ids: jax.Array, table: jax.Array, *,
+                  block_v: int | None = None, block_d: int | None = None,
+                  chunk_e: int | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    """ids: (B, F) int32, table: (V, D) -> pooled (B, D).
 
-    offsets_ref: (nblocks+1,) SMEM — run boundaries in the sorted arrays
-    ids_ref:     (E_pad,)  sorted ids
-    rows_ref:    (E_pad, D) gradient rows in sorted-id order
-    gtable_ref:  (BLOCK_V, D) output block owned exclusively by this program
-    counts_ref:  (BLOCK_V,)   contributor counts for the same rows
+    The table stays in HBM; VMEM holds 2 ``(block_v, block_d)`` tiles and
+    2 ``chunk_e``-entry chunks regardless of V (module docstring)."""
+    return _embedding_bag_streamed(
+        ids, table, block_v=block_v or BLOCK_V, block_d=block_d or BLOCK_D,
+        chunk_e=chunk_e or CHUNK_E, interpret=runtime.resolve(interpret))
+
+
+# ---------------------------------------------------------------------------
+# backward: streamed sorted-scatter segment reduce
+# ---------------------------------------------------------------------------
+
+def _sorted_grad_rows(ids: jax.Array, grad_out: jax.Array, capacity: int,
+                      block_v: int, chunk_e: int, d_pad: int):
+    """Sorted-run bucketing (shared ``_sorted_entries``) plus the per-entry
+    gradient-row payload, D-padded for tiling and length-padded to match
+    the sentinel-padded id stream."""
+    f = ids.shape[1]
+    sorted_ids, order, offsets, cap_pad, nvb = _sorted_entries(
+        ids, capacity, block_v, chunk_e)
+    rows = grad_out[order // f]                           # (E, D)
+    if d_pad != grad_out.shape[1]:
+        rows = jnp.pad(rows, ((0, 0), (0, d_pad - grad_out.shape[1])))
+    rows = jnp.pad(rows, ((0, sorted_ids.shape[0] - rows.shape[0]), (0, 0)))
+    return sorted_ids, rows, offsets, cap_pad, nvb
+
+
+def _bwd_kernel(offsets_ref, ids_hbm, rows_hbm, gtable_ref, counts_ref,
+                ids_buf, rows_buf, ids_sem, rows_sem, *,
+                block_v: int, chunk_e: int):
+    """Segment reduce for one (vocab block, D block) output tile.
+
+    offsets_ref: (nvb+1,) SMEM — run boundaries in the sorted arrays
+    ids_hbm:     (E_pad,) HBM  — sorted ids
+    rows_hbm:    (E_pad, D_pad) HBM — gradient rows in sorted-id order
+    gtable_ref:  (BLOCK_V, BLOCK_D) VMEM output tile owned by this program
+    counts_ref:  (BLOCK_V,) contributor counts (recomputed per D block —
+                 every D block of a vocab block derives the same values)
+    ids_buf:     (2, CHUNK_E) / rows_buf: (2, CHUNK_E, BLOCK_D) —
+                 double-buffered chunk pipeline
     """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    start = offsets_ref[i]
+    end = offsets_ref[i + 1]
+    bd = gtable_ref.shape[1]
+    nchunks = (end - start + chunk_e - 1) // chunk_e
+
+    def dmas(slot, c):
+        p0 = start + c * chunk_e
+        return (
+            pltpu.make_async_copy(ids_hbm.at[pl.ds(p0, chunk_e)],
+                                  ids_buf.at[slot], ids_sem.at[slot]),
+            pltpu.make_async_copy(
+                rows_hbm.at[pl.ds(p0, chunk_e), pl.ds(j * bd, bd)],
+                rows_buf.at[slot], rows_sem.at[slot]))
+
+    @pl.when(nchunks > 0)
+    def _():
+        for dma in dmas(0, 0):
+            dma.start()
+
+    vids = i * block_v + jax.lax.broadcasted_iota(
+        jnp.int32, (chunk_e, block_v), 1)
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, (chunk_e, 1), 0)[:, 0]
+
+    def body(c, carry):
+        acc, cnt = carry
+        cur = c % 2
+
+        @pl.when(c + 1 < nchunks)
+        def _():
+            for dma in dmas((c + 1) % 2, c + 1):   # overlap chunk c compute
+                dma.start()
+
+        for dma in dmas(cur, c):
+            dma.wait()
+        idx = ids_buf[cur]                                   # (CHUNK_E,)
+        rows = rows_buf[cur].astype(jnp.float32)
+        valid = (start + c * chunk_e + pos_iota) < end
+        onehot = ((idx[:, None] == vids)
+                  & valid[:, None]).astype(jnp.float32)      # (E, V)
+        acc = acc + jax.lax.dot_general(
+            onehot, rows, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (V, D)
+        cnt = cnt + jnp.sum(onehot, axis=0)
+        return acc, cnt
+
+    acc, cnt = jax.lax.fori_loop(
+        0, nchunks, body,
+        (jnp.zeros((block_v, bd), jnp.float32),
+         jnp.zeros((block_v,), jnp.float32)))
+    gtable_ref[...] = acc
+    counts_ref[...] = cnt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("capacity", "block_v", "block_d", "chunk_e",
+                     "interpret"))
+def _embedding_bag_grad_streamed(ids: jax.Array, grad_out: jax.Array,
+                                 capacity: int, *, block_v: int,
+                                 block_d: int, chunk_e: int, interpret: bool
+                                 ) -> tuple[jax.Array, jax.Array]:
+    d = grad_out.shape[1]
+    bd = _block_d(d, block_d)
+    d_pad = _round_up(d, bd)
+    sorted_ids, sorted_rows, offsets, cap_pad, nvb = _sorted_grad_rows(
+        ids, grad_out, capacity, block_v, chunk_e, d_pad)
+
+    gtable, counts = pl.pallas_call(
+        functools.partial(_bwd_kernel, block_v=block_v, chunk_e=chunk_e),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nvb, d_pad // bd),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),     # sorted ids
+                pl.BlockSpec(memory_space=pltpu.ANY),     # sorted rows
+            ],
+            out_specs=[
+                pl.BlockSpec((block_v, bd), lambda i, j, *_: (i, j)),
+                pl.BlockSpec((block_v,), lambda i, j, *_: (i,)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((2, chunk_e), jnp.int32),
+                pltpu.VMEM((2, chunk_e, bd), grad_out.dtype),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((cap_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((cap_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(offsets, sorted_ids, sorted_rows)
+    return gtable[:capacity, :d], counts[:capacity]
+
+
+def embedding_bag_grad(ids: jax.Array, grad_out: jax.Array, capacity: int,
+                       *, block_v: int | None = None,
+                       block_d: int | None = None,
+                       chunk_e: int | None = None,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Scatter grads back to rows with per-ID contributor counts.
+
+    ids: (B, F); grad_out: (B, D) -> (grad_table (V, D), counts (V,)).
+
+    Sort once, then stream disjoint segments through the double-buffered
+    chunk pipeline in parallel over (vocab block x D block) — see the
+    module docstring for the design."""
+    return _embedding_bag_grad_streamed(
+        ids, grad_out, capacity, block_v=block_v or BLOCK_V,
+        block_d=block_d or BLOCK_D, chunk_e=chunk_e or CHUNK_E,
+        interpret=runtime.resolve(interpret))
+
+
+# ---------------------------------------------------------------------------
+# PR-1 VMEM-resident backward — kept as a bit-exactness regression oracle
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel_resident(offsets_ref, ids_ref, rows_ref, gtable_ref,
+                         counts_ref):
+    """PR-1 segment reduce: the whole sorted (E_pad, D) array sits in VMEM
+    via a full-array BlockSpec (only viable for VMEM-sized configs)."""
     i = pl.program_id(0)
     v0 = i * BLOCK_V
     start = offsets_ref[i]
@@ -118,41 +476,19 @@ def _bwd_kernel(offsets_ref, ids_ref, rows_ref, gtable_ref, counts_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
-def embedding_bag_grad(ids: jax.Array, grad_out: jax.Array, capacity: int,
-                       *, interpret: bool = True
-                       ) -> tuple[jax.Array, jax.Array]:
-    """Scatter grads back to rows with per-ID contributor counts.
-
-    ids: (B, F); grad_out: (B, D) -> (grad_table (V, D), counts (V,)).
-
-    Sort once, then reduce disjoint segments in parallel over the grid —
-    see the module docstring for the design.
-    """
-    b, f = ids.shape
+def _embedding_bag_grad_resident(ids: jax.Array, grad_out: jax.Array,
+                                 capacity: int, *, interpret: bool
+                                 ) -> tuple[jax.Array, jax.Array]:
     d = grad_out.shape[1]
-    e = b * f
-    flat_ids = ids.reshape(-1).astype(jnp.int32)
-    order = jnp.argsort(flat_ids)
-    sorted_ids = flat_ids[order]
-    sorted_rows = grad_out[order // f]                        # (E, D)
-
-    cap_pad = capacity + ((-capacity) % BLOCK_V)
-    nblocks = cap_pad // BLOCK_V
-    boundaries = jnp.arange(nblocks + 1, dtype=jnp.int32) * BLOCK_V
-    offsets = jnp.searchsorted(sorted_ids, boundaries).astype(jnp.int32)
-
-    # pad so the CHUNK_E-wide dynamic slices never run off the end; the
-    # sentinel id cap_pad matches no block and is masked out anyway
-    e_pad = e + ((-e) % CHUNK_E) + CHUNK_E
-    sorted_ids = jnp.pad(sorted_ids, (0, e_pad - e),
-                         constant_values=cap_pad)
-    sorted_rows = jnp.pad(sorted_rows, ((0, e_pad - e), (0, 0)))
+    sorted_ids, sorted_rows, offsets, cap_pad, nvb = _sorted_grad_rows(
+        ids, grad_out, capacity, BLOCK_V, CHUNK_E, d)
+    e_pad = sorted_ids.shape[0]
 
     gtable, counts = pl.pallas_call(
-        _bwd_kernel,
+        _bwd_kernel_resident,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(nblocks,),
+            grid=(nvb,),
             in_specs=[
                 pl.BlockSpec((e_pad,), lambda i, *_: (0,)),
                 pl.BlockSpec((e_pad, d), lambda i, *_: (0, 0)),
@@ -169,3 +505,11 @@ def embedding_bag_grad(ids: jax.Array, grad_out: jax.Array, capacity: int,
         interpret=interpret,
     )(offsets, sorted_ids, sorted_rows)
     return gtable[:capacity], counts[:capacity]
+
+
+def embedding_bag_grad_resident(ids: jax.Array, grad_out: jax.Array,
+                                capacity: int, *,
+                                interpret: bool | None = None
+                                ) -> tuple[jax.Array, jax.Array]:
+    return _embedding_bag_grad_resident(
+        ids, grad_out, capacity, interpret=runtime.resolve(interpret))

@@ -1,39 +1,38 @@
 """jit'd public wrappers over the Pallas kernels.
 
-``interpret`` defaults to CPU-interpret mode in this container; on real
-TPUs call ``set_interpret(False)`` once at startup (launch scripts do).
-The tree-level helpers apply the kernels across parameter pytrees.
+``interpret`` resolves from the platform at first use — CPU/GPU containers
+interpret, real TPUs compile (``repro.kernels.runtime``).  Override the
+session default with the ``REPRO_INTERPRET`` env var or ``set_interpret``;
+every wrapper additionally honors a per-call ``interpret=`` override.
+The tree-level helpers apply the kernels across parameter pytrees; the
+pooled-lookup wrappers expose the streamed embedding kernels' capacity
+knobs (``block_v``/``block_d``/``chunk_e``).
 """
 from __future__ import annotations
 
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_grad
 from repro.kernels.fused_adagrad import fused_adagrad
 from repro.kernels.gba_aggregate import gba_aggregate
 from repro.kernels.gba_apply import gba_apply
-
-_INTERPRET = True
-
-
-def set_interpret(value: bool) -> None:
-    global _INTERPRET
-    _INTERPRET = value
+from repro.kernels.runtime import set_interpret  # noqa: F401  (re-export)
 
 
 def gba_aggregate_tree(grads_stacked: Any, tokens: jax.Array,
-                       step: jax.Array, *, iota: int) -> Any:
+                       step: jax.Array, *, iota: int,
+                       interpret: bool | None = None) -> Any:
     """Kernel-backed version of repro.core.gba.aggregate_dense: flattens
     each leaf to (M, -1), runs the fused kernel, restores shapes."""
+    itp = runtime.resolve(interpret)
 
     def per_leaf(g):
         m = g.shape[0]
         flat = g.reshape(m, -1)
-        out = gba_aggregate(flat, tokens, step, iota=iota,
-                            interpret=_INTERPRET)
+        out = gba_aggregate(flat, tokens, step, iota=iota, interpret=itp)
         return out.reshape(g.shape[1:])
 
     return jax.tree.map(per_leaf, grads_stacked)
@@ -47,17 +46,17 @@ def gba_apply_flat(param_flat: jax.Array, accum_flat: jax.Array,
     """Fused decay-aggregate + Adagrad over the flat (M, N) buffer — the
     single-launch PS apply path (see repro.core.gba.FlatLayout)."""
     return gba_apply(param_flat, accum_flat, buffer, tokens, step, lr,
-                     iota=iota, eps=eps,
-                     interpret=_INTERPRET if interpret is None else interpret)
+                     iota=iota, eps=eps, interpret=runtime.resolve(interpret))
 
 
-def adagrad_apply_tree(params: Any, grads: Any, accums: Any, lr
-                       ) -> tuple[Any, Any]:
+def adagrad_apply_tree(params: Any, grads: Any, accums: Any, lr, *,
+                       interpret: bool | None = None) -> tuple[Any, Any]:
     """Fused Adagrad over a pytree (flattening each leaf to 1-D)."""
+    itp = runtime.resolve(interpret)
 
     def per_leaf(p, g, a):
         np_, na = fused_adagrad(p.reshape(-1), g.reshape(-1), a.reshape(-1),
-                                lr, interpret=_INTERPRET)
+                                lr, interpret=itp)
         return np_.reshape(p.shape), na.reshape(a.shape)
 
     out = jax.tree.map(per_leaf, params, grads, accums)
@@ -67,10 +66,24 @@ def adagrad_apply_tree(params: Any, grads: Any, accums: Any, lr
     return new_p, new_a
 
 
-def pooled_lookup(ids: jax.Array, table: jax.Array) -> jax.Array:
-    return embedding_bag(ids, table, interpret=_INTERPRET)
+def pooled_lookup(ids: jax.Array, table: jax.Array, *,
+                  block_v: int | None = None, block_d: int | None = None,
+                  chunk_e: int | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    """Streamed pooled lookup: the (V, D) table stays in HBM; VMEM holds
+    O(block_v * block_d + chunk_e * block_d) scratch regardless of V."""
+    return embedding_bag(ids, table, block_v=block_v, block_d=block_d,
+                         chunk_e=chunk_e,
+                         interpret=runtime.resolve(interpret))
 
 
-def pooled_lookup_grad(ids: jax.Array, grad_out: jax.Array, capacity: int
+def pooled_lookup_grad(ids: jax.Array, grad_out: jax.Array, capacity: int,
+                       *, block_v: int | None = None,
+                       block_d: int | None = None,
+                       chunk_e: int | None = None,
+                       interpret: bool | None = None
                        ) -> tuple[jax.Array, jax.Array]:
-    return embedding_bag_grad(ids, grad_out, capacity, interpret=_INTERPRET)
+    """Streamed sorted-scatter backward with per-ID contributor counts."""
+    return embedding_bag_grad(ids, grad_out, capacity, block_v=block_v,
+                              block_d=block_d, chunk_e=chunk_e,
+                              interpret=runtime.resolve(interpret))

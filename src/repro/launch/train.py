@@ -6,6 +6,15 @@
 On real TPU hardware this launches the sharded GBA train step on the
 production mesh; in this CPU container use ``--reduced`` (smoke variant,
 1-device mesh) — the full configs are exercised by launch.dryrun.
+
+``--vocab N`` runs the sparse-module smoke instead: N-row hashed embedding
+table trained through the DMA-streamed pooled-lookup kernels on the smoke
+mesh.  ``--vocab 1000000`` exercises a table ~250x larger than a VMEM bank
+without ever materializing a (V, D) VMEM block (the streamed pipeline
+holds O(block) scratch; see repro.kernels.embedding_bag).
+
+    PYTHONPATH=src python -m repro.launch.train --vocab 1000000 --steps 5 \
+        [--embed-dim 16] [--block-v 512] [--block-d 128] [--chunk-e 256]
 """
 from __future__ import annotations
 
@@ -26,9 +35,58 @@ from repro.models import transformer as T
 from repro.optim import get_optimizer
 
 
+def run_embedding_smoke(args) -> None:
+    """Sparse-module smoke: a --vocab-row hashed table trained end-to-end
+    through the streamed pooled-lookup kernels (forward tile stream +
+    sorted-scatter backward) on the smoke mesh.  The (V, D) table lives in
+    HBM for both passes; VMEM holds only the double-buffered blocks."""
+    from repro import embeddings
+    from repro.kernels.embedding_bag import (BLOCK_D, BLOCK_V, CHUNK_E,
+                                             stream_vmem_bytes)
+    cap, dim, f = args.vocab, args.embed_dim, 26
+    stream = embeddings.StreamConfig(
+        block_v=args.block_v or None, block_d=args.block_d or None,
+        chunk_e=args.chunk_e or None)
+    vm = stream_vmem_bytes(dim, block_v=stream.block_v or BLOCK_V,
+                           block_d=stream.block_d or BLOCK_D,
+                           chunk_e=stream.chunk_e or CHUNK_E)
+    mesh = make_smoke_mesh()
+    tbl = embeddings.init_table(jax.random.PRNGKey(0), cap, dim)
+    print(f"embedding smoke: V={cap:,} D={dim} "
+          f"table={cap * dim * 4 / 1e6:.0f}MB HBM-resident; "
+          f"streamed VMEM fwd={vm['fwd']:,}B bwd={vm['bwd']:,}B "
+          f"(block-bounded, V-independent)")
+
+    def loss_fn(table_arr, ids, labels):
+        pooled = embeddings.pooled_lookup(
+            embeddings.EmbeddingTable(table_arr, tbl.last_update), ids,
+            stream=stream)
+        logit = pooled.sum(axis=-1)
+        return jnp.mean(jnp.maximum(logit, 0) - logit * labels
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    table_arr = tbl.table
+    t0 = time.perf_counter()
+    with mesh:
+        for i in range(args.steps):
+            key = jax.random.PRNGKey(1000 + i)
+            raw = jax.random.randint(key, (args.batch, f), 0, 1 << 30)
+            ids = embeddings.hash_ids(raw, cap)
+            labels = (jax.random.uniform(key, (args.batch,)) < 0.5
+                      ).astype(jnp.float32)
+            loss, gtable = grad_fn(table_arr, ids, labels)
+            table_arr = table_arr - args.lr * gtable
+            rate = (i + 1) * args.batch * f / (time.perf_counter() - t0)
+            print(f"step {i:4d}  loss {float(loss):.4f}  "
+                  f"{rate:,.0f} lookups/s")
+    assert jnp.isfinite(loss), "embedding smoke diverged"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--arch", choices=ARCH_IDS,
+                    help="LM architecture (required unless --vocab)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
@@ -41,7 +99,24 @@ def main() -> None:
                     help="flat-buffer GBA + fused gba_apply kernel; "
                          "FORCES Adagrad and a single-host flat state "
                          "(implied for Adagrad archs with --reduced)")
+    ap.add_argument("--vocab", type=int, default=0,
+                    help="run the streamed-embedding sparse smoke at this "
+                         "hash capacity (e.g. 1000000) instead of an LM "
+                         "arch")
+    ap.add_argument("--embed-dim", type=int, default=16)
+    ap.add_argument("--block-v", type=int, default=0,
+                    help="vocab rows per streamed table tile (0 = default)")
+    ap.add_argument("--block-d", type=int, default=0,
+                    help="embedding cols per output tile (0 = default)")
+    ap.add_argument("--chunk-e", type=int, default=0,
+                    help="sorted entries per pipeline step (0 = default)")
     args = ap.parse_args()
+
+    if args.vocab:
+        run_embedding_smoke(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --vocab is given")
 
     cfg = get_config(args.arch)
     # resolve the optimizer from the canonical name BEFORE .reduced()

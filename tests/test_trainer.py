@@ -100,3 +100,39 @@ def test_history_ring_clamps_counted():
     _, _, _, stats = trainer.replay(params, opt.init(params), sched,
                                     stream, day=0)
     assert stats.history_clamps >= 1
+
+
+def test_streamed_presence_counts_match_default_path():
+    """GBATrainer(embed_stream=...) routes the per-slot presence counts
+    through the DMA-streamed sorted-scatter kernel; the replayed parameters
+    must match the XLA one-hot-scatter path exactly (same counts, same
+    masks, same updates)."""
+    import dataclasses
+    from repro.embeddings import StreamConfig
+
+    cfg = dataclasses.replace(CRITEO_DEEPFM, name="criteo-deepfm-tiny",
+                              hash_capacity=2048, mlp_dims=(32, 16))
+    stream = make_clickstream(cfg, seed=0, batches_per_day=16, batch_size=32)
+    opt = get_optimizer("sgd", 0.05)
+    # a schedule with real staleness so the per-ID relaxation path runs
+    steps = [[Slot(k * 3 + i, max(0, k - i), k, 1.0 if i < 2 else 0.0)
+              for i in range(3)] for k in range(4)]
+    sched = Schedule("gba", 32, steps)
+
+    def run(embed_stream):
+        params = init_recsys(jax.random.PRNGKey(2), cfg)
+        trainer = GBATrainer(cfg, opt, iota=1, embed_stream=embed_stream)
+        p, _, last_update, stats = trainer.replay(
+            params, opt.init(params), sched, stream, day=0)
+        return p, last_update, stats
+
+    p1, lu1, st1 = run(None)
+    p2, lu2, st2 = run(StreamConfig())
+    assert st1.embed_rows_rescued == st2.embed_rows_rescued
+    np.testing.assert_array_equal(np.asarray(lu1), np.asarray(lu2))
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(p1),
+            jax.tree_util.tree_leaves_with_path(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=str(path))
