@@ -14,12 +14,23 @@ Rows cover the kernels the train path actually launches:
   the ``row_bytes``/``scatter_bytes`` HBM-traffic model stays at the PR-1
   level because only touched tiles / sorted runs ever move.
 
+* ``gba_apply_sharded`` — the PS-shard rendering of the fused apply
+  (``core.flat_sharded.ShardedFlatLayout``): each shard launches
+  ``gba_apply`` ONCE on its contiguous tile-aligned ``(M, shard_size)``
+  slice, vs one launch per leaf for the per-leaf chain.  The row times the
+  shard-local launch (exactly what each device runs inside shard_map) and
+  records the launch-count ratio and per-shard VMEM residency — both
+  gated: ``vmem_bytes`` may not grow and ``launch_ratio`` may not shrink
+  (``benchmarks.run --check``).
+
 Rows whose kernel has been superseded on the train path (``gba_aggregate``
 by ``gba_apply``) are skipped by default so the JSON stops reporting a dead
 hot path as current; pass ``all_rows=True`` (CLI ``--all``) to include
 them, tagged ``status=superseded``.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -32,9 +43,50 @@ from repro.kernels.embedding_bag import (BLOCK_D, BLOCK_V, CHUNK_E,
                                          stream_vmem_bytes)
 from repro.kernels.fused_adagrad import fused_adagrad
 from repro.kernels.gba_aggregate import gba_aggregate
-from repro.kernels.gba_apply import gba_apply
+from repro.kernels.gba_apply import apply_vmem_bytes, gba_apply
 
 HBM_BW = 819e9
+
+
+def _sharded_apply_rows(m: int = 8) -> list[str]:
+    """One row per shard count: the fused sharded apply on a real reduced
+    LM layout (granite-8b smoke params), timed as the per-shard launch."""
+    from repro.core.flat_sharded import ShardedFlatLayout
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("granite-8b").reduced()
+    pshapes = jax.eval_shape(
+        functools.partial(T.init_model, cfg=cfg), jax.random.PRNGKey(0))
+    n_leaves = len(jax.tree.leaves(pshapes))
+    rows = []
+    for shards in (4, 8):
+        layout = ShardedFlatLayout.from_params(pshapes, shards)
+        sn = layout.shard_size
+        key = jax.random.PRNGKey(shards)
+        p = jax.random.normal(key, (sn,))
+        ac = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (sn,)))
+        buf = jax.random.normal(jax.random.PRNGKey(2), (m, sn))
+        toks = jax.random.randint(key, (m,), 0, 8)
+        step = jnp.int32(7)
+        t_ker = time_call(lambda *a: gba_apply(*a, 0.01, iota=4),
+                          p, ac, buf, toks, step, iters=2)
+        # per-leaf chain on the same module: one fused launch per leaf
+        # (the most favorable per-leaf baseline; the unfused aggregate ->
+        # adagrad chain doubles it) vs ONE launch per shard
+        ratio = n_leaves / 1.0
+        traffic = (m * sn + 4 * sn) * 4
+        rows.append(csv_row(
+            f"kernel.gba_apply_sharded.granite8b-smoke.{shards}shard",
+            t_ker,
+            f"num_shards={shards};shard_n={sn};"
+            f"padded_total={layout.padded_total};tile={layout.tile};"
+            f"launches_per_apply=1;per_leaf_launches={n_leaves};"
+            f"launch_ratio={ratio:.1f};"
+            f"vmem_bytes={apply_vmem_bytes(m)};"
+            f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f};"
+            f"fusion=one_launch_per_ps_shard"))
+    return rows
 
 
 def _embedding_rows(b, f, v, dim, tag, *, time_ref=True) -> list[str]:
@@ -115,6 +167,8 @@ def run(all_rows: bool = False) -> list[str]:
         f"buffer_ratio={buf_bytes_fused / buf_bytes_ref:.2f};"
         f"tpu_roofline_us={total_fused / HBM_BW * 1e6:.1f};"
         f"fusion=aggregate+adagrad_one_pass"))
+
+    rows += _sharded_apply_rows()
 
     if all_rows:
         # gba_aggregate: standalone reduction (still behind

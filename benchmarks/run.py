@@ -11,8 +11,11 @@ trajectory is machine-readable across PRs.
 ``--check`` compares the fresh kernel/roofline rows against a committed
 baseline JSON (default ``BENCH_kernels.json``) and exits non-zero on a
 >1.5x ``us_per_call`` regression, any growth of a ``vmem_bytes`` or
-``buffer_ratio`` column, or a baseline row that disappeared — the CI perf
-gate (scripts/ci.sh).  ``--all`` includes rows for superseded kernels.
+``buffer_ratio`` column, any shrink of a ``launch_ratio`` column, a
+baseline row that disappeared, or a fresh row missing from the baseline
+(uncommitted drift: adding a bench row without regenerating and
+committing the JSON fails fast) — the CI perf gate (scripts/ci.sh).
+``--all`` includes rows for superseded kernels.
 """
 from __future__ import annotations
 
@@ -25,6 +28,7 @@ import traceback
 JSON_SUITES = ("kernels", "roofline")
 US_REGRESSION = 1.5           # --check: max allowed us_per_call growth
 MONOTONE_COLS = ("vmem_bytes", "buffer_ratio")   # --check: no growth at all
+FLOOR_COLS = ("launch_ratio",)                   # --check: no shrink at all
 
 
 def parse_derived(derived: str) -> dict:
@@ -61,6 +65,9 @@ def check_records(fresh: list[dict], baseline_path: str) -> list[str]:
 
     Superseded rows absent from a fresh default run are not counted as
     disappeared when the baseline tagged them ``status=superseded``.
+    Fresh rows with no baseline entry fail too — that is uncommitted
+    drift: a new bench row only clears CI once the regenerated JSON is
+    committed alongside it.
     """
     try:
         with open(baseline_path) as f:
@@ -69,6 +76,13 @@ def check_records(fresh: list[dict], baseline_path: str) -> list[str]:
         return [f"baseline {baseline_path} not found"]
     fresh_by_name = {r["name"]: r for r in fresh}
     failures = []
+    for name, cur in fresh_by_name.items():
+        if name not in baseline and cur.get("status") != "superseded":
+            # superseded rows only appear under --all and are skipped in
+            # the committed default-run baseline on purpose
+            failures.append(
+                f"{name}: fresh row not in committed baseline "
+                f"(regenerate and commit {baseline_path})")
     for name, base in baseline.items():
         cur = fresh_by_name.get(name)
         if cur is None:
@@ -89,6 +103,14 @@ def check_records(fresh: list[dict], baseline_path: str) -> list[str]:
                 elif c_val > base[col]:
                     failures.append(
                         f"{name}: {col} grew {base[col]:g} -> {c_val:g}")
+        for col in FLOOR_COLS:
+            if col in base and isinstance(base[col], float):
+                c_val = cur.get(col)
+                if c_val is None:
+                    failures.append(f"{name}: {col} column disappeared")
+                elif c_val < base[col]:
+                    failures.append(
+                        f"{name}: {col} shrank {base[col]:g} -> {c_val:g}")
     return failures
 
 
@@ -108,6 +130,9 @@ def main() -> None:
                          "JSON (default BENCH_kernels.json)")
     ap.add_argument("--all", action="store_true",
                     help="include rows for superseded kernels")
+    ap.add_argument("--summary", action="store_true",
+                    help="print a one-line-per-row table of the gated "
+                         "kernel/roofline rows (scripts/ci.sh)")
     args = ap.parse_args()
 
     from benchmarks import (bench_autoswitch, bench_convergence,
@@ -173,6 +198,13 @@ def main() -> None:
             json.dump(records, f, indent=2)
         print(f"suite.json,0.0,wrote={args.json};rows={len(records)}",
               flush=True)
+    if args.summary and records:
+        gated = ("vmem_bytes", "buffer_ratio", "launch_ratio")
+        print(f"{'gated row':<55} {'us/call':>10}  gated columns")
+        for r in records:
+            cols = " ".join(f"{k}={r[k]:g}" for k in gated
+                            if isinstance(r.get(k), float))
+            print(f"{r['name']:<55} {r['us_per_call']:>10.1f}  {cols}")
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,244 @@
+"""Sharding-aware flat-buffer GBA: the fused one-launch apply per PS shard.
+
+``core.gba.FlatLayout`` ravels the dense module into one ``(M, N_total)``
+buffer so a full-buffer apply is ONE ``repro.kernels.gba_apply`` launch —
+but only on a single host: the flat axis carries no sharding, so the
+sharded production path kept the per-leaf ``buffer_push_and_maybe_apply``
+chain (one aggregate + one optimizer launch per leaf, dozens per global
+step).  This module closes that gap:
+
+:class:`ShardedFlatLayout`
+    Lays leaves back-to-back like ``FlatLayout`` but pads every leaf to a
+    ``tile`` multiple (leaf boundaries coincide with tile boundaries) and
+    pads the total so it splits into ``num_shards`` equal, tile-aligned,
+    contiguous slices.  Shard ``s`` owns ``flat[s*shard_size :
+    (s+1)*shard_size]`` — whole kernel blocks when ``tile`` is the
+    ``gba_apply`` block size (the default), so a PS shard's apply never
+    straddles a partial tile.
+
+:func:`make_sharded_apply`
+    ``shard_map`` wrapper that runs the single-launch ``gba_apply``
+    (token-decay aggregate + Adagrad, one VMEM pass) on each shard's
+    slice.  Tokens / global step are replicated, so every shard derives
+    the same (M,) decay weights from the broadcast scalars on its scalar
+    core; the gradient columns never cross shards — no collective touches
+    the buffer at apply time.
+
+:func:`sharded_flat_push_and_maybe_apply`
+    Drop-in sharded counterpart of
+    ``core.gba.flat_buffer_push_and_maybe_apply``: the push is
+    elementwise along the flat axis (XLA keeps it local under a
+    ``P(None, axis)`` buffer sharding); the apply branch launches the
+    shard-mapped kernel.  Bit-exact with the single-host flat path and
+    with a per-leaf ``gba_apply`` launch chain (same kernel arithmetic
+    per element; see :func:`per_leaf_kernel_apply`).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.gba import flat_buffer_push
+from repro.kernels.gba_apply import BLOCK_N
+
+Params = Any
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclass(frozen=True)
+class ShardedFlatLayout:
+    """Leaf-aligned, tile-aligned flat layout split into PS shard slices.
+
+    ``offsets[j]`` (a ``tile`` multiple) is where leaf ``j``'s data starts;
+    ``padded_sizes[j]`` is its tile-rounded extent, zero-filled past
+    ``sizes[j]``.  ``padded_total == num_shards * shard_size`` and
+    ``shard_size % tile == 0``, so every shard's slice starts and ends on
+    a tile boundary regardless of leaf shapes.  Host-side object
+    (hashable tuples only) — closable over by jitted train steps.
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    sizes: tuple[int, ...]
+    padded_sizes: tuple[int, ...]
+    offsets: tuple[int, ...]
+    total: int            # sum of true leaf sizes (FlatLayout's N_total)
+    padded_total: int     # num_shards * shard_size
+    num_shards: int
+    shard_size: int
+    tile: int
+
+    @classmethod
+    def from_params(cls, params: Params, num_shards: int,
+                    tile: int = BLOCK_N) -> "ShardedFlatLayout":
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if tile < 1:
+            raise ValueError(f"tile must be >= 1, got {tile}")
+        leaves, treedef = jax.tree.flatten(params)
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+        sizes = tuple(math.prod(s) for s in shapes)
+        padded_sizes = tuple(_round_up(s, tile) for s in sizes)
+        offsets, off = [], 0
+        for ps in padded_sizes:
+            offsets.append(off)
+            off += ps
+        padded_total = _round_up(max(off, tile), num_shards * tile)
+        return cls(treedef, shapes, dtypes, sizes, padded_sizes,
+                   tuple(offsets), sum(sizes), padded_total, num_shards,
+                   padded_total // num_shards, tile)
+
+    # -- ravel / unravel ----------------------------------------------------
+    def ravel(self, tree: Params) -> jax.Array:
+        """Pytree -> (padded_total,) f32; per-leaf tail padding is zero so
+        padding columns never contribute gradient (Adagrad on a zero grad
+        is the identity)."""
+        leaves = jax.tree.leaves(tree)
+        parts = []
+        for l, size, padded in zip(leaves, self.sizes, self.padded_sizes):
+            flat = l.reshape(-1).astype(jnp.float32)
+            if padded > size:
+                flat = jnp.pad(flat, (0, padded - size))
+            parts.append(flat)
+        tail = self.padded_total - (self.offsets[-1] + self.padded_sizes[-1]
+                                    if self.offsets else 0)
+        if tail:
+            parts.append(jnp.zeros((tail,), jnp.float32))
+        return jnp.concatenate(parts)
+
+    def unravel(self, flat: jax.Array) -> Params:
+        leaves = [
+            flat[o:o + n].reshape(s).astype(dt)
+            for o, n, s, dt in zip(self.offsets, self.sizes, self.shapes,
+                                   self.dtypes)
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- shard geometry -----------------------------------------------------
+    def shard_bounds(self, s: int) -> tuple[int, int]:
+        """[start, stop) of shard ``s``'s flat slice (host ints)."""
+        if not 0 <= s < self.num_shards:
+            raise IndexError(s)
+        return s * self.shard_size, (s + 1) * self.shard_size
+
+    def leaves_in_shard(self, s: int) -> tuple[int, ...]:
+        """Leaf indices whose (padded) extent overlaps shard ``s`` — what
+        a per-leaf chain would have to launch on this shard."""
+        lo, hi = self.shard_bounds(s)
+        return tuple(
+            j for j, (o, n) in enumerate(zip(self.offsets,
+                                             self.padded_sizes))
+            if o < hi and o + n > lo)
+
+
+def init_sharded_flat_buffer(params: Params, buffer_size: int,
+                             num_shards: int, tile: int = BLOCK_N
+                             ) -> tuple[ShardedFlatLayout, dict]:
+    """Sharded flat M-slot buffer: ``grads`` is ``(M, padded_total)`` and
+    meant to live under a ``P(None, axis)`` sharding (columns split across
+    PS shards, slots replicated)."""
+    layout = ShardedFlatLayout.from_params(params, num_shards, tile)
+    return layout, {
+        "grads": jnp.zeros((buffer_size, layout.padded_total), jnp.float32),
+        "tokens": jnp.zeros((buffer_size,), jnp.int32),
+        "fill": jnp.zeros((), jnp.int32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_sharded_apply(mesh: Mesh, layout: ShardedFlatLayout, *,
+                       axis: str = "data", iota: int, eps: float = 1e-10,
+                       interpret: bool | None = None):
+    """shard_map'd single-launch apply: each PS shard runs ``gba_apply``
+    on its contiguous ``(M, shard_size)`` buffer slice.
+
+    Returns ``apply(param_flat, accum_flat, grads, tokens, step, lr) ->
+    (new_param_flat, new_accum_flat)`` over GLOBAL ``(padded_total,)`` /
+    ``(M, padded_total)`` arrays.  Tokens/step/lr are broadcast (``P()``)
+    — the decay weights are computed once from them on every shard's
+    scalar core; no collective touches the gradient columns.
+    """
+    if layout.num_shards != mesh.shape[axis]:
+        raise ValueError(
+            f"layout has {layout.num_shards} shards but mesh axis "
+            f"{axis!r} has {mesh.shape[axis]} devices")
+    from repro.kernels import ops
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(None, axis), P(), P(), P()),
+        out_specs=(P(axis), P(axis)),
+        check_rep=False)
+    def apply_shards(param_flat, accum_flat, grads, tokens, step, lr):
+        return ops.gba_apply_flat(param_flat, accum_flat, grads, tokens,
+                                  step, lr, iota=iota, eps=eps,
+                                  interpret=interpret)
+
+    return apply_shards
+
+
+def sharded_flat_push_and_maybe_apply(
+        buffer: dict, flat_grad: jax.Array, token: jax.Array,
+        param_flat: jax.Array, accum_flat: jax.Array, lr, *, mesh: Mesh,
+        layout: ShardedFlatLayout, axis: str = "data", iota: int,
+        eps: float = 1e-10, interpret: bool | None = None):
+    """Sharded counterpart of ``core.gba.flat_buffer_push_and_maybe_apply``.
+
+    The push is elementwise along the flat axis, so under a
+    ``P(None, axis)`` buffer sharding XLA keeps it communication-free; the
+    apply branch is one shard-mapped ``gba_apply`` launch per PS shard.
+    Returns ``(new_param_flat, new_accum_flat, applied, new_buffer)`` —
+    the partial-buffer branch passes params/accum through untouched.
+    """
+    new_buffer, is_full = flat_buffer_push(buffer, flat_grad, token)
+    apply_shards = make_sharded_apply(mesh, layout, axis=axis, iota=iota,
+                                      eps=eps, interpret=interpret)
+
+    def do_apply(operands):
+        p, a, grads, tokens, step, lr_ = operands
+        return apply_shards(p, a, grads, tokens, step, lr_)
+
+    def do_noop(operands):
+        p, a, *_ = operands
+        return p, a
+
+    new_param, new_accum = jax.lax.cond(
+        is_full, do_apply, do_noop,
+        (param_flat, accum_flat, new_buffer["grads"], new_buffer["tokens"],
+         buffer["step"], jnp.asarray(lr, jnp.float32)))
+    return new_param, new_accum, is_full, new_buffer
+
+
+def per_leaf_kernel_apply(layout: ShardedFlatLayout, param_flat: jax.Array,
+                          accum_flat: jax.Array, grads: jax.Array,
+                          tokens: jax.Array, step: jax.Array, lr, *,
+                          iota: int, eps: float = 1e-10,
+                          interpret: bool | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
+    """The per-leaf launch chain the sharded apply replaces: one
+    ``gba_apply`` call per leaf slice (``len(layout.sizes)`` launches vs
+    one per shard).  Kernel arithmetic is identical per element, so this
+    is the bit-exactness oracle for the fused sharded path — and the
+    launch-count baseline for ``benchmarks.bench_kernels``."""
+    from repro.kernels import ops
+    new_p, new_a = param_flat, accum_flat
+    for off, size in zip(layout.offsets, layout.sizes):
+        lp, la = ops.gba_apply_flat(
+            param_flat[off:off + size], accum_flat[off:off + size],
+            grads[:, off:off + size], tokens, step, lr, iota=iota, eps=eps,
+            interpret=interpret)
+        new_p = jax.lax.dynamic_update_slice(new_p, lp, (off,))
+        new_a = jax.lax.dynamic_update_slice(new_a, la, (off,))
+    return new_p, new_a

@@ -12,6 +12,17 @@ worker gradients with the token-control decay — Algorithm 2 as a single
 which is exactly ``aggregate_dense`` (tested equivalent), but with the
 collective schedule explicit — the form you deploy when worker batches
 genuinely differ per device (e.g. heterogeneous data streams).
+
+:func:`make_gba_fused_psum_step` is the fused rendering of the same
+mapping: every device doubles as a PS shard owning a contiguous
+tile-aligned slice of the flat parameter vector
+(``core.flat_sharded.ShardedFlatLayout``).  Workers all-gather the flat
+params for the forward, then an ``all_to_all`` routes each worker's
+gradient slice to its owning shard — the PS "write", worker->shard only,
+never shard<->shard — building the ``(M, shard_size)`` buffer on which
+ONE ``gba_apply`` launch does the token-decay aggregation AND the Adagrad
+update.  The only ``psum`` left is the scalar loss; the per-leaf
+aggregate -> optimizer chain (and its per-leaf launches) is gone.
 """
 from __future__ import annotations
 
@@ -24,6 +35,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.flat_sharded import ShardedFlatLayout
 from repro.core.staleness import threshold_decay
 
 
@@ -54,5 +66,69 @@ def make_gba_psum_step(mesh: Mesh, loss_fn: Callable, optimizer,
         agg, loss = grad_agg(params, batch, tokens, gstep)
         params, opt_state = optimizer.update(params, agg, opt_state)
         return params, opt_state, loss
+
+    return step
+
+
+def make_gba_fused_psum_step(mesh: Mesh, loss_fn: Callable,
+                             layout: ShardedFlatLayout, *, iota: int,
+                             lr: float, eps: float = 1e-10,
+                             axis: str = "data",
+                             interpret: bool | None = None):
+    """Fused PS rendering of :func:`make_gba_psum_step` (Adagrad only).
+
+    Returns ``step(param_flat, accum_flat, batch, tokens, gstep) ->
+    (new_param_flat, new_accum_flat, loss)`` where ``param_flat`` /
+    ``accum_flat`` are the layout's ``(padded_total,)`` vectors sharded
+    ``P(axis)`` and ``tokens`` is (M,) — one per worker, M = mesh
+    ``axis`` size.
+
+    Collective schedule per global step (DCN/ICI traffic in parens):
+
+    1. ``all_gather`` the flat param slices for the forward (the FSDP
+       gather a sharded PS must pay anyway);
+    2. each worker grads its OWN batch shard with its OWN token;
+    3. ``all_to_all`` routes worker ``w``'s gradient slice ``s`` to shard
+       ``s`` — building the ``(M, shard_size)`` buffer in place of a
+       full-gradient ``psum`` (same bytes as a reduce-scatter, none of it
+       shard<->shard);
+    4. ONE ``gba_apply`` launch per shard fuses decay-aggregate + Adagrad
+       on the local slice — the decay weights come from the broadcast
+       ``(tokens, gstep)`` scalars, identically on every shard;
+    5. ``psum`` of the decayed scalar loss — the only cross-shard
+       reduction left.
+    """
+    m = mesh.shape[axis]
+    if layout.num_shards != m:
+        raise ValueError(
+            f"layout has {layout.num_shards} shards but mesh axis "
+            f"{axis!r} has {m} devices")
+    shard_n = layout.shard_size
+    from repro.kernels import ops
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
+        out_specs=(P(axis), P(axis), P()),
+        check_rep=False)
+    def step(param_flat, accum_flat, batch, token, gstep):
+        param_full = lax.all_gather(param_flat, axis, axis=0, tiled=True)
+        params = layout.unravel(param_full)
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        # worker w's flat gradient, rows = destination shards; all_to_all
+        # leaves row w of shard s holding worker w's slice s: the (M,
+        # shard_size) buffer gba_apply consumes, built without any
+        # shard<->shard exchange
+        gm = layout.ravel(g).reshape(m, shard_n)
+        buf = lax.all_to_all(gm, axis, split_axis=0, concat_axis=0,
+                             tiled=True)
+        tokens_all = lax.all_gather(token.reshape(-1)[:1], axis, axis=0,
+                                    tiled=True)
+        new_p, new_a = ops.gba_apply_flat(
+            param_flat, accum_flat, buf, tokens_all, gstep, lr, iota=iota,
+            eps=eps, interpret=interpret)
+        w = threshold_decay(token.reshape(-1)[:1], gstep, iota)[0]
+        loss = lax.psum(loss * w, axis) / m
+        return new_p, new_a, loss
 
     return step

@@ -171,6 +171,61 @@ def stacked_specs(specs: Any, lead: int = 1) -> Any:
                         is_leaf=lambda s: isinstance(s, P))
 
 
+# ---------------------------------------------------------------------------
+# flat-sharded GBA state (core.flat_sharded.ShardedFlatLayout)
+# ---------------------------------------------------------------------------
+
+def flat_slice_specs(layout: Any, mesh: Mesh, axis: str = "data") -> dict:
+    """PartitionSpecs for a ShardedFlatLayout's state: flat param/accum
+    vectors split over ``axis`` (each PS shard owns one contiguous
+    tile-aligned slice), buffer columns likewise with the M slot axis
+    replicated, slot tokens / fill / step scalars replicated.
+
+    Validates the layout geometry against the mesh: the layout must have
+    exactly one shard per device on ``axis`` and its padded total must
+    split evenly (both guaranteed by ``ShardedFlatLayout.from_params``;
+    re-checked here so a stale layout fails loudly at spec-build time
+    rather than as an XLA shape error inside shard_map).
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
+    n_dev = _axis_size(mesh, axis)
+    if layout.num_shards != n_dev:
+        raise ValueError(
+            f"layout has {layout.num_shards} shards, mesh axis {axis!r} "
+            f"has {n_dev} devices")
+    if layout.padded_total != layout.num_shards * layout.shard_size:
+        raise ValueError(
+            f"layout padded_total {layout.padded_total} != "
+            f"{layout.num_shards} * {layout.shard_size}")
+    return {
+        "flat": P(axis),
+        "buffer": {
+            "grads": P(None, axis),
+            "tokens": P(),
+            "fill": P(),
+            "step": P(),
+        },
+    }
+
+
+def fused_state_specs(layout: Any, mesh: Mesh, pspecs: Any,
+                      axis: str = "data") -> dict:
+    """Spec tree for ``launch.steps``'s fused train state: model params
+    keep their per-leaf rules (``pspecs``, the forward consumes them),
+    while the Adagrad accumulator and the M-slot gradient buffer live
+    flat — sliced over ``axis`` for a ShardedFlatLayout, replicated for
+    the single-host ``FlatLayout``."""
+    from repro.core.flat_sharded import ShardedFlatLayout
+    if isinstance(layout, ShardedFlatLayout):
+        flat = flat_slice_specs(layout, mesh, axis)
+    else:
+        flat = {"flat": P(), "buffer": {"grads": P(), "tokens": P(),
+                                        "fill": P(), "step": P()}}
+    return {"params": pspecs, "accum": flat["flat"],
+            "buffer": flat["buffer"]}
+
+
 def cache_specs(cache_shapes: Any, cfg: ModelConfig, mesh: Mesh,
                 batch: int) -> Any:
     """Decode-cache PartitionSpecs.  Batch shards over (pod, data) when it

@@ -29,6 +29,16 @@ from jax.experimental.pallas import tpu as pltpu
 BLOCK_N = 2048
 
 
+def apply_vmem_bytes(m: int, block_n: int = BLOCK_N,
+                     buf_itemsize: int = 4) -> int:
+    """Per-launch VMEM residency of one grid step: the (m, BLOCK_N) buffer
+    block plus param/accum in and out blocks (f32).  Shard-size
+    independent — a PS shard's launch holds exactly this much regardless
+    of its slice length (benchmarks/bench_kernels gba_apply_sharded
+    rows)."""
+    return m * block_n * buf_itemsize + 4 * block_n * 4
+
+
 def _kernel(tokens_ref, step_ref, iota_ref, lr_ref, param_ref, accum_ref,
             buf_ref, new_param_ref, new_accum_ref, *, eps: float):
     """buf: (M, BLOCK_N) VMEM; param/accum: (BLOCK_N,); scalars in SMEM."""

@@ -140,30 +140,59 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
 
 
 def init_fused_train_state(params: Any, gba: GBAConfig,
-                           initial_accum: float = 0.1):
+                           initial_accum: float = 0.1,
+                           mesh: Mesh | None = None, axis: str = "data",
+                           tile: int | None = None):
     """State for the fused flat-buffer GBA step: params stay a pytree (the
     model consumes them), the Adagrad accumulator and the M-slot gradient
-    buffer live flat.  Returns (layout, state)."""
-    from repro.core.gba import init_flat_buffer
-    layout, buffer = init_flat_buffer(params, gba.buffer_size)
+    buffer live flat.  Returns (layout, state).
+
+    With a ``mesh`` whose ``axis`` has >1 device the flat arrays use the
+    sharding-aware :class:`repro.core.flat_sharded.ShardedFlatLayout`
+    (leaf- and tile-aligned slices, one per PS shard); otherwise the
+    single-host ``FlatLayout``.
+    """
+    if mesh is not None and mesh.shape[axis] > 1:
+        from repro.core.flat_sharded import init_sharded_flat_buffer
+        from repro.kernels.gba_apply import BLOCK_N
+        layout, buffer = init_sharded_flat_buffer(
+            params, gba.buffer_size, mesh.shape[axis],
+            tile or BLOCK_N)
+        total = layout.padded_total
+    else:
+        from repro.core.gba import init_flat_buffer
+        layout, buffer = init_flat_buffer(params, gba.buffer_size)
+        total = layout.total
     state = {
         "params": params,
-        "accum": jnp.full((layout.total,), initial_accum, jnp.float32),
+        "accum": jnp.full((total,), initial_accum, jnp.float32),
         "buffer": buffer,
     }
     return layout, state
 
 
+def fused_state_specs(layout, mesh: Mesh, pspecs: Any,
+                      axis: str = "data") -> dict:
+    """PartitionSpecs matching ``init_fused_train_state``'s output —
+    canonical constructor in ``distributed.sharding``."""
+    return S.fused_state_specs(layout, mesh, pspecs, axis)
+
+
 def make_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
-                          lr: float = 1e-3, eps: float = 1e-10):
+                          lr: float = 1e-3, eps: float = 1e-10,
+                          mesh: Mesh | None = None, axis: str = "data"):
     """Adagrad GBA step on the flat buffer: push the raveled gradient; on
     the M-th microstep ONE ``gba_apply`` kernel launch does the token-decay
     aggregation and the Adagrad update for the whole dense module (vs the
     per-leaf aggregate -> optimizer XLA chain of ``make_train_step``).
 
-    Single-host / smoke-mesh shape: raveling concatenates all leaves, so
-    this step does not carry per-leaf shardings — the sharded production
-    path keeps ``make_train_step`` (a PS shard would run this per-shard).
+    With a ``mesh`` and a :class:`~repro.core.flat_sharded.ShardedFlatLayout`
+    the apply branch routes through ``make_sharded_apply``: the buffer
+    columns are sliced over ``axis`` (``P(None, axis)``) and every PS
+    shard launches ``gba_apply`` on its own contiguous tile-aligned slice
+    — still one launch per shard per global step, bit-exact with the
+    single-host path.  Without a mesh the layout is the single-host
+    ``FlatLayout`` and the apply is one global launch.
 
     The param ravel/unravel lives INSIDE the apply branch: the M-1
     buffer-fill microsteps pay only the gradient ravel (which feeds the
@@ -173,6 +202,14 @@ def make_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
     from repro.kernels import ops
     iota = gba.staleness_tolerance
 
+    sharded_apply = None
+    if mesh is not None:
+        from repro.core.flat_sharded import (ShardedFlatLayout,
+                                             make_sharded_apply)
+        if isinstance(layout, ShardedFlatLayout):
+            sharded_apply = make_sharded_apply(mesh, layout, axis=axis,
+                                               iota=iota, eps=eps)
+
     def train_step(state, batch, token):
         loss, grads = jax.value_and_grad(_loss_from_batch)(
             state["params"], cfg, batch)
@@ -181,9 +218,14 @@ def make_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
 
         def do_apply(operands):
             params, accum, grads_buf, tokens, step = operands
-            flat_p, new_accum = ops.gba_apply_flat(
-                layout.ravel(params), accum, grads_buf, tokens, step, lr,
-                iota=iota, eps=eps)
+            if sharded_apply is not None:
+                flat_p, new_accum = sharded_apply(
+                    layout.ravel(params), accum, grads_buf, tokens, step,
+                    jnp.asarray(lr, jnp.float32))
+            else:
+                flat_p, new_accum = ops.gba_apply_flat(
+                    layout.ravel(params), accum, grads_buf, tokens, step,
+                    lr, iota=iota, eps=eps)
             return layout.unravel(flat_p), new_accum
 
         def do_noop(operands):

@@ -15,11 +15,44 @@ holds O(block) scratch; see repro.kernels.embedding_bag).
 
     PYTHONPATH=src python -m repro.launch.train --vocab 1000000 --steps 5 \
         [--embed-dim 16] [--block-v 512] [--block-d 128] [--chunk-e 256]
+
+``--mesh DxT`` (e.g. ``--mesh 4x1``) trains on an explicit (data, model)
+mesh instead of the smoke/production default; with ``--fused`` the GBA
+state uses the sharding-aware flat layout — buffer columns sliced across
+the ``data`` axis, ONE ``gba_apply`` launch per PS shard per global step
+(core.flat_sharded).  On CPU, pair it with ``--host-devices N`` to force
+N host-platform devices (sets ``--xla_force_host_platform_device_count``
+before jax device init — the same path the shard_map tests use):
+
+    PYTHONPATH=src python -m repro.launch.train --arch kimi-k2-1t-a32b \
+        --reduced --fused --mesh 4x1 --host-devices 4 --steps 8
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# --host-devices must land in XLA_FLAGS before ANY jax backend init, and
+# the repro imports below create arrays at import time — so peek at argv
+# here instead of waiting for argparse (both --host-devices N and
+# --host-devices=N forms; a malformed value is left for argparse to
+# report)
+def _peek_host_devices(argv: list[str]) -> str | None:
+    for i, a in enumerate(argv):
+        if a == "--host-devices" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--host-devices="):
+            return a.split("=", 1)[1]
+    return None
+
+
+_n = _peek_host_devices(sys.argv)
+if _n and _n.isdigit():
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} "
+        f"--xla_force_host_platform_device_count={_n}").strip()
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +61,9 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import GBAConfig
 from repro.data import make_lm_stream
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
-from repro.launch.steps import (ARCH_OPTIMIZER, init_fused_train_state,
-                                init_train_state, make_fused_train_step,
-                                make_train_step)
+from repro.launch.steps import (ARCH_OPTIMIZER, fused_state_specs,
+                                init_fused_train_state, init_train_state,
+                                make_fused_train_step, make_train_step)
 from repro.models import transformer as T
 from repro.optim import get_optimizer
 
@@ -97,8 +130,16 @@ def main() -> None:
                     help="smoke variant on the 1-device mesh (CPU)")
     ap.add_argument("--fused", action="store_true",
                     help="flat-buffer GBA + fused gba_apply kernel; "
-                         "FORCES Adagrad and a single-host flat state "
-                         "(implied for Adagrad archs with --reduced)")
+                         "FORCES Adagrad (implied for Adagrad archs with "
+                         "--reduced); under a multi-device --mesh the "
+                         "flat state shards per-slice (one launch per "
+                         "PS shard)")
+    ap.add_argument("--mesh", default="",
+                    help="explicit DATAxMODEL mesh, e.g. 4x1; overrides "
+                         "the smoke/production default")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N host-platform devices before jax device "
+                         "init (CPU test path for --mesh)")
     ap.add_argument("--vocab", type=int, default=0,
                     help="run the streamed-embedding sparse smoke at this "
                          "hash capacity (e.g. 1000000) instead of an LM "
@@ -124,6 +165,15 @@ def main() -> None:
     opt_name = ARCH_OPTIMIZER.get(cfg.name, "adam")
     if args.reduced:
         cfg = cfg.reduced()
+    if args.mesh:
+        d, _, t = args.mesh.partition("x")
+        shape = (int(d), int(t or 1))
+        if jax.device_count() < shape[0] * shape[1]:
+            ap.error(f"--mesh {args.mesh} needs {shape[0] * shape[1]} "
+                     f"devices, have {jax.device_count()} "
+                     f"(use --host-devices on CPU)")
+        mesh = jax.make_mesh(shape, ("data", "model"))
+    elif args.reduced:
         mesh = make_smoke_mesh()
     else:
         mesh = make_production_mesh()
@@ -144,12 +194,27 @@ def main() -> None:
 
     with mesh:
         if fused:
-            layout, state = init_fused_train_state(params, gba)
+            layout, state = init_fused_train_state(params, gba, mesh=mesh)
             step_fn = jax.jit(
-                make_fused_train_step(cfg, gba, layout, lr=args.lr),
+                make_fused_train_step(cfg, gba, layout, lr=args.lr,
+                                      mesh=mesh),
                 donate_argnums=0)
-            print(f"fused gba_apply path (Adagrad): flat buffer "
-                  f"({gba.buffer_size}, {layout.total})")
+            from repro.core.flat_sharded import ShardedFlatLayout
+            if isinstance(layout, ShardedFlatLayout):
+                from repro.distributed import sharding as S
+                pspecs = S.param_specs(
+                    jax.eval_shape(lambda t: t, params), mesh)
+                specs = fused_state_specs(layout, mesh, pspecs)
+                state = jax.device_put(state, S.to_named(specs, mesh))
+                print(f"sharded fused gba_apply path (Adagrad): flat "
+                      f"buffer ({gba.buffer_size}, {layout.padded_total}) "
+                      f"sliced over data={layout.num_shards} "
+                      f"(shard_size={layout.shard_size}, "
+                      f"tile={layout.tile}; 1 apply launch/shard vs "
+                      f"{len(layout.sizes)} per-leaf)")
+            else:
+                print(f"fused gba_apply path (Adagrad): flat buffer "
+                      f"({gba.buffer_size}, {layout.total})")
         else:
             step_fn = jax.jit(make_train_step(cfg, opt, gba),
                               donate_argnums=0)

@@ -77,6 +77,99 @@ def test_build_step_lowers_on_smoke_mesh(arch, kind, shape):
     assert compiled.cost_analysis() is not None
 
 
+# ---------------------------------------------------------------------------
+# ShardedFlatLayout: leaf-/tile-aligned slice geometry + spec construction
+# (host-side only — no multi-device mesh needed)
+# ---------------------------------------------------------------------------
+
+def _odd_params():
+    """Deliberately non-tile-multiple leaf sizes."""
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (33, 9)),          # 297
+            "b": {"c": jnp.arange(41, dtype=jnp.float32),
+                  "d": jax.random.normal(k, (700,))}}
+
+
+@pytest.mark.parametrize("num_shards,tile", [(1, 256), (4, 256), (4, 128),
+                                             (8, 256)])
+def test_sharded_flat_layout_geometry(num_shards, tile):
+    """Every leaf starts on a tile boundary, every shard slice is a whole
+    number of tiles, and padded_total splits exactly across shards."""
+    from repro.core.flat_sharded import ShardedFlatLayout
+    params = _odd_params()
+    layout = ShardedFlatLayout.from_params(params, num_shards, tile=tile)
+    assert layout.total == sum(layout.sizes)
+    assert layout.padded_total == num_shards * layout.shard_size
+    assert layout.shard_size % tile == 0
+    for off, size, padded in zip(layout.offsets, layout.sizes,
+                                 layout.padded_sizes):
+        assert off % tile == 0
+        assert padded % tile == 0
+        assert padded >= size
+    for s in range(num_shards):
+        lo, hi = layout.shard_bounds(s)
+        assert lo % tile == 0 and hi % tile == 0
+        assert hi - lo == layout.shard_size
+    covered = sorted(j for s in range(num_shards)
+                     for j in layout.leaves_in_shard(s))
+    assert set(covered) == set(range(len(layout.sizes)))
+
+
+def test_sharded_flat_layout_roundtrip_and_padding():
+    """ravel zero-fills leaf/tail padding; unravel(ravel(x)) == x
+    bitwise for non-tile-multiple leaves."""
+    from repro.core.flat_sharded import ShardedFlatLayout
+    params = _odd_params()
+    layout = ShardedFlatLayout.from_params(params, 4, tile=256)
+    flat = layout.ravel(params)
+    assert flat.shape == (layout.padded_total,)
+    for a, b in zip(jax.tree.leaves(layout.unravel(flat)),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # padding columns are exactly zero (so Adagrad on them is the identity)
+    mask = np.ones(layout.padded_total, bool)
+    for off, size in zip(layout.offsets, layout.sizes):
+        mask[off:off + size] = False
+    assert not np.any(np.asarray(flat)[mask])
+
+
+def test_flat_slice_specs_and_validation():
+    """Spec construction from the layout: flat vectors split over the PS
+    axis, buffer columns likewise, scalars replicated; geometry mismatch
+    fails loudly at spec-build time."""
+    from repro.core.flat_sharded import ShardedFlatLayout
+    mesh = make_smoke_mesh()     # (data=1, model=1)
+    params = _odd_params()
+    layout = ShardedFlatLayout.from_params(params, 1, tile=256)
+    specs = S.flat_slice_specs(layout, mesh, "data")
+    assert specs["flat"] == P("data")
+    assert specs["buffer"]["grads"] == P(None, "data")
+    assert specs["buffer"]["tokens"] == P()
+    assert specs["buffer"]["fill"] == P()
+    bad = ShardedFlatLayout.from_params(params, 4, tile=256)
+    with pytest.raises(ValueError, match="shards"):
+        S.flat_slice_specs(bad, mesh, "data")
+    with pytest.raises(ValueError, match="axis"):
+        S.flat_slice_specs(layout, mesh, "ps")
+
+
+def test_fused_state_specs_tree():
+    """fused_state_specs keeps per-leaf model rules for params and slices
+    the flat accum/buffer."""
+    from repro.core.flat_sharded import ShardedFlatLayout
+    mesh = make_smoke_mesh()
+    params = _odd_params()
+    layout = ShardedFlatLayout.from_params(params, 1, tile=256)
+    pshapes = jax.eval_shape(lambda t: t, params)
+    pspecs = S.param_specs(pshapes, mesh)
+    specs = S.fused_state_specs(layout, mesh, pspecs, "data")
+    assert specs["accum"] == P("data")
+    assert specs["buffer"]["grads"] == P(None, "data")
+    flat_p, tree_p = jax.tree_util.tree_flatten(
+        specs["params"], is_leaf=lambda x: isinstance(x, P))
+    assert tree_p == jax.tree_util.tree_flatten(pshapes)[1]
+
+
 def test_cache_specs_long_context_seq_sharding():
     """long_500k (batch=1): KV seq dim takes the data axis.  Uses an
     AbstractMesh so the production (16,16) geometry is testable on 1 CPU
