@@ -10,8 +10,10 @@ trajectory is machine-readable across PRs.
 
 ``--check`` compares the fresh kernel/roofline rows against a committed
 baseline JSON (default ``BENCH_kernels.json``) and exits non-zero on a
->1.5x ``us_per_call`` regression, any growth of a ``vmem_bytes`` or
-``buffer_ratio`` column, any shrink of a ``launch_ratio`` column, a
+>5x ``us_per_call`` regression (interpret-mode wall time is load noise;
+only catastrophic algorithmic blowups should trip it), any growth of a
+``vmem_bytes`` or ``buffer_ratio`` column, any shrink of a
+``launch_ratio`` column, a
 baseline row that disappeared, or a fresh row missing from the baseline
 (uncommitted drift: adding a bench row without regenerating and
 committing the JSON fails fast) — the CI perf gate (scripts/ci.sh).
@@ -26,7 +28,12 @@ import time
 import traceback
 
 JSON_SUITES = ("kernels", "roofline")
-US_REGRESSION = 1.5           # --check: max allowed us_per_call growth
+# --check: max allowed us_per_call growth.  Interpret-mode wall time
+# swings ~4x with container/CI load (the bench docstrings call it noise;
+# the derived columns are the claims), so this only catches catastrophic
+# algorithmic blowups (serialized grids, O(V) work) — the structural
+# columns below are gated exactly.
+US_REGRESSION = 5.0
 MONOTONE_COLS = ("vmem_bytes", "buffer_ratio")   # --check: no growth at all
 FLOOR_COLS = ("launch_ratio",)                   # --check: no shrink at all
 
