@@ -19,8 +19,11 @@ Rows cover the kernels the train path actually launches:
   ``gba_apply`` ONCE on its contiguous tile-aligned ``(M, shard_size)``
   slice, vs one launch per leaf for the per-leaf chain.  The row times the
   shard-local launch (exactly what each device runs inside shard_map) and
-  records the launch-count ratio and per-shard VMEM residency — both
-  gated: ``vmem_bytes`` may not grow and ``launch_ratio`` may not shrink
+  records the launch-count ratio, per-shard VMEM residency, and the
+  layer-grouped schedule's ``peak_gather_bytes`` (per-device peak live
+  gathered bytes = the largest layer group, vs ``full_gather_bytes`` for
+  the full-vector gather) — all gated: ``vmem_bytes`` and
+  ``peak_gather_bytes`` may not grow and ``launch_ratio`` may not shrink
   (``benchmarks.run --check``).
 
 Rows whose kernel has been superseded on the train path (``gba_aggregate``
@@ -50,7 +53,16 @@ HBM_BW = 819e9
 
 def _sharded_apply_rows(m: int = 8) -> list[str]:
     """One row per shard count: the fused sharded apply on a real reduced
-    LM layout (granite-8b smoke params), timed as the per-shard launch."""
+    LM layout (granite-8b smoke params), timed as the per-shard launch.
+
+    The layout is the production default — layer-grouped under the
+    model's canonical grouping — so the row also records the grouped
+    collective schedule's footprint: ``peak_gather_bytes`` (per-device
+    peak live gathered bytes = the LARGEST layer group, gated: may not
+    grow) vs ``full_gather_bytes`` (what the PR-4 full-vector gather
+    pinned = padded_total f32).  Grouping does not change the timed
+    launch: the per-shard slice stays one contiguous run and the apply
+    stays one ``gba_apply`` call."""
     from repro.core.flat_sharded import ShardedFlatLayout
     from repro.configs import get_config
     from repro.models import transformer as T
@@ -61,7 +73,8 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
     n_leaves = len(jax.tree.leaves(pshapes))
     rows = []
     for shards in (4, 8):
-        layout = ShardedFlatLayout.from_params(pshapes, shards)
+        layout = ShardedFlatLayout.from_params(pshapes, shards,
+                                               group_by=T.param_group_key)
         sn = layout.shard_size
         key = jax.random.PRNGKey(shards)
         p = jax.random.normal(key, (sn,))
@@ -84,6 +97,11 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
             f"launches_per_apply=1;per_leaf_launches={n_leaves};"
             f"launch_ratio={ratio:.1f};"
             f"vmem_bytes={apply_vmem_bytes(m)};"
+            f"layer_groups={layout.num_groups};"
+            f"peak_gather_bytes={layout.peak_gather_bytes};"
+            f"full_gather_bytes={layout.full_gather_bytes};"
+            f"gather_ratio="
+            f"{layout.peak_gather_bytes / layout.full_gather_bytes:.3f};"
             f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f};"
             f"fusion=one_launch_per_ps_shard"))
     return rows

@@ -1,0 +1,94 @@
+"""Markdown perf-trajectory report: fresh BENCH_kernels.json vs baseline.
+
+    python -m benchmarks.report --baseline /tmp/committed.json \
+        --fresh BENCH_kernels.json
+
+CI (.github/workflows/ci.yml) pipes the output into
+``$GITHUB_STEP_SUMMARY`` after ``scripts/ci.sh`` regenerates the fresh
+JSON, so every commit's run page shows the per-row trajectory — the
+structural columns the ``--check`` gate enforces (vmem / launch / buffer
+/ peak-gather) plus the ungated interpret-mode wall time — instead of the
+numbers living only inside a downloadable artifact.  Pure-stdlib on
+purpose: the report step must not need the repro package or jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+# gated structural columns (benchmarks.run MONOTONE_COLS + FLOOR_COLS),
+# duplicated literally so this module stays importable without jax
+COLUMNS = ("vmem_bytes", "launch_ratio", "buffer_ratio",
+           "peak_gather_bytes")
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float) and v == int(v) and abs(v) >= 1000:
+        return f"{int(v):,}"
+    if isinstance(v, float):
+        return f"{v:g}"
+    return str(v)
+
+
+def _cell(base, cur) -> str:
+    """One table cell: value, annotated when it moved vs baseline."""
+    if base is None and cur is None:
+        return "—"
+    if base == cur:
+        return _fmt(cur)
+    return f"{_fmt(base)} → **{_fmt(cur)}**"
+
+
+def render(baseline: list[dict], fresh: list[dict]) -> str:
+    base_by = {r["name"]: r for r in baseline}
+    fresh_by = {r["name"]: r for r in fresh}
+    lines = ["## Kernel bench trajectory (fresh vs committed baseline)",
+             "",
+             "| row | us/call (base → fresh) | " +
+             " | ".join(COLUMNS) + " |",
+             "|---|---|" + "---|" * len(COLUMNS)]
+    for name in sorted(set(base_by) | set(fresh_by)):
+        b, f = base_by.get(name), fresh_by.get(name)
+        if f is None:
+            status = (" *(superseded)*"
+                      if (b or {}).get("status") == "superseded"
+                      else " **(MISSING fresh)**")
+            lines.append(f"| ~~{name}~~{status} | {_fmt(b['us_per_call'])}"
+                         f" → — |" + " — |" * len(COLUMNS))
+            continue
+        if b is None:
+            us = f"— → {_fmt(f['us_per_call'])} **(new row)**"
+        else:
+            b_us, f_us = b["us_per_call"], f["us_per_call"]
+            ratio = f" ({f_us / b_us:.2f}x)" if b_us else ""
+            us = f"{_fmt(b_us)} → {_fmt(f_us)}{ratio}"
+        cells = " | ".join(
+            _cell((b or {}).get(c), f.get(c)) for c in COLUMNS)
+        lines.append(f"| {name} | {us} | {cells} |")
+    lines += ["",
+              "us/call is interpret-mode wall time (load noise; gated only "
+              "at 5x). The structural columns are exact and gated: "
+              "vmem/buffer/peak-gather may not grow, launch_ratio may not "
+              "shrink."]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON (e.g. git show "
+                         "HEAD:BENCH_kernels.json)")
+    ap.add_argument("--fresh", default="BENCH_kernels.json",
+                    help="freshly generated JSON (scripts/ci.sh output)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    print(render(baseline, fresh))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,8 @@ trajectory is machine-readable across PRs.
 baseline JSON (default ``BENCH_kernels.json``) and exits non-zero on a
 >5x ``us_per_call`` regression (interpret-mode wall time is load noise;
 only catastrophic algorithmic blowups should trip it), any growth of a
-``vmem_bytes`` or ``buffer_ratio`` column, any shrink of a
-``launch_ratio`` column, a
+``vmem_bytes``, ``buffer_ratio`` or ``peak_gather_bytes`` column, any
+shrink of a ``launch_ratio`` column, a
 baseline row that disappeared, or a fresh row missing from the baseline
 (uncommitted drift: adding a bench row without regenerating and
 committing the JSON fails fast) — the CI perf gate (scripts/ci.sh).
@@ -34,7 +34,8 @@ JSON_SUITES = ("kernels", "roofline")
 # algorithmic blowups (serialized grids, O(V) work) — the structural
 # columns below are gated exactly.
 US_REGRESSION = 5.0
-MONOTONE_COLS = ("vmem_bytes", "buffer_ratio")   # --check: no growth at all
+MONOTONE_COLS = ("vmem_bytes", "buffer_ratio",
+                 "peak_gather_bytes")            # --check: no growth at all
 FLOOR_COLS = ("launch_ratio",)                   # --check: no shrink at all
 
 
@@ -206,7 +207,7 @@ def main() -> None:
         print(f"suite.json,0.0,wrote={args.json};rows={len(records)}",
               flush=True)
     if args.summary and records:
-        gated = ("vmem_bytes", "buffer_ratio", "launch_ratio")
+        gated = MONOTONE_COLS + FLOOR_COLS
         print(f"{'gated row':<55} {'us/call':>10}  gated columns")
         for r in records:
             cols = " ".join(f"{k}={r[k]:g}" for k in gated

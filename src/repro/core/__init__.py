@@ -14,14 +14,15 @@ from repro.core.gba import (FlatLayout, aggregate_dense, aggregate_embedding,
                             init_buffer, init_flat_buffer)
 from repro.core.staleness import (DECAY_FNS, exponential_decay, linear_decay,
                                   threshold_decay)
-from repro.core.tokens import (TokenList, num_global_steps, token_for_batch,
+from repro.core.tokens import (TokenList, TokenListExhausted,
+                               num_global_steps, token_for_batch,
                                token_list)
 from repro.core.trainer import GBATrainer, ReplayStats, evaluate
 
 __all__ = [
     "ContinualResult", "DECAY_FNS", "FlatLayout", "GBATrainer", "ModeSetup",
-    "ReplayStats", "ShardedFlatLayout", "TokenList", "aggregate_dense",
-    "aggregate_embedding",
+    "ReplayStats", "ShardedFlatLayout", "TokenList", "TokenListExhausted",
+    "aggregate_dense", "aggregate_embedding",
     "buffer_push_and_maybe_apply", "decay_weights", "default_setups",
     "evaluate", "exponential_decay", "flat_buffer_push",
     "flat_buffer_push_and_maybe_apply",

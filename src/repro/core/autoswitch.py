@@ -29,12 +29,21 @@ class AutoSwitchController:
     switch_up: float = 1.5      # est. GBA/sync speedup to leave sync
     switch_down: float = 1.15   # est. speedup below which to return
     mode: str = "sync"
+    max_history: int = 4096     # decisions kept; long runs stay bounded
     history: list = field(default_factory=list)
 
     def estimate_speedup(self, worker_rates) -> float:
         """worker_rates: per-worker samples/s measured over the window
-        (``SimMetrics.worker_rates``; on a real PS: completions / wall)."""
+        (``SimMetrics.worker_rates``; on a real PS: completions / wall).
+
+        An EMPTY window — every worker stalled, or the telemetry scrape
+        raced the first completion — carries no signal: returns NaN
+        rather than crashing on ``min()`` of nothing, and ``decide``
+        keeps the current mode (NaN compares False against both
+        thresholds)."""
         rates = np.asarray(worker_rates, dtype=np.float64)
+        if rates.size == 0:
+            return float("nan")
         slowest = rates.min()
         if slowest <= 0:
             return float("inf")
@@ -49,4 +58,6 @@ class AutoSwitchController:
         elif self.mode == "gba" and s <= self.switch_down:
             self.mode = "sync"
         self.history.append((s, self.mode))
+        if len(self.history) > self.max_history:
+            del self.history[:len(self.history) - self.max_history]
         return self.mode

@@ -16,13 +16,30 @@ step).  This module closes that gap:
     ``gba_apply`` block size (the default), so a PS shard's apply never
     straddles a partial tile.
 
+    With ``group_by`` the layout is additionally **layer-grouped**: every
+    leaf is assigned to a layer group derived from its pytree path, each
+    group's flat extent is contiguous and splits into ``num_shards`` equal
+    tile-aligned sub-slices, and the GLOBAL flat ordering is shard-major —
+    shard ``s``'s contiguous slice is the concatenation of every group's
+    ``s``-th sub-slice.  A layer-grouped collective schedule
+    (``core.gba_shard_map.make_gba_fused_psum_step``) can then
+    ``all_gather`` one group at a time (peak live gathered bytes =
+    :attr:`peak_gather_bytes` = the largest group, not ``N_total``) and
+    route each group's gradient with its own ``all_to_all`` while the
+    backward still computes the remaining groups — yet the per-shard slice
+    stays ONE contiguous run, so the fused apply is still a single
+    ``gba_apply`` launch.  ``group_by=None`` (the default) is exactly the
+    ungrouped PR-4 layout: one group covering everything, shard-major
+    ordering degenerating to plain concatenation.
+
 :func:`make_sharded_apply`
     ``shard_map`` wrapper that runs the single-launch ``gba_apply``
     (token-decay aggregate + Adagrad, one VMEM pass) on each shard's
     slice.  Tokens / global step are replicated, so every shard derives
     the same (M,) decay weights from the broadcast scalars on its scalar
     core; the gradient columns never cross shards — no collective touches
-    the buffer at apply time.
+    the buffer at apply time.  Grouping-agnostic: the kernel only sees the
+    contiguous local slice.
 
 :func:`sharded_flat_push_and_maybe_apply`
     Drop-in sharded counterpart of
@@ -38,7 +55,7 @@ from __future__ import annotations
 import functools
 import math
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -49,22 +66,45 @@ from repro.core.gba import flat_buffer_push
 from repro.kernels.gba_apply import BLOCK_N
 
 Params = Any
+GroupBy = Callable[[tuple[str, ...]], str]
 
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+def path_names(path) -> tuple[str, ...]:
+    """Pytree key path -> name tuple (dict keys, ``#i`` sequence indices,
+    attribute names) — the canonical helper behind both the layer
+    grouping here and the sharding rules in ``distributed.sharding``."""
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"#{e.idx}")
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return tuple(names)
+
+
 @dataclass(frozen=True)
 class ShardedFlatLayout:
     """Leaf-aligned, tile-aligned flat layout split into PS shard slices.
 
-    ``offsets[j]`` (a ``tile`` multiple) is where leaf ``j``'s data starts;
-    ``padded_sizes[j]`` is its tile-rounded extent, zero-filled past
-    ``sizes[j]``.  ``padded_total == num_shards * shard_size`` and
-    ``shard_size % tile == 0``, so every shard's slice starts and ends on
-    a tile boundary regardless of leaf shapes.  Host-side object
-    (hashable tuples only) — closable over by jitted train steps.
+    ``offsets[j]`` (a ``tile`` multiple) is where leaf ``j``'s data starts
+    *within its layer group's contiguous flat*; ``padded_sizes[j]`` is its
+    tile-rounded extent, zero-filled past ``sizes[j]``.  Group ``g``
+    occupies ``group_sizes[g]`` flat elements (a ``num_shards * tile``
+    multiple), of which shard ``s`` owns the ``s``-th
+    ``group_shard_sizes[g]``-wide sub-slice at local column
+    ``group_local_offsets[g]`` of its slice.  ``padded_total ==
+    num_shards * shard_size`` and ``shard_size % tile == 0``, so every
+    shard's slice starts and ends on a tile boundary regardless of leaf
+    shapes.  For the default single-group layout (``group_by=None``) the
+    group-local offsets ARE global flat offsets — the PR-4 layout,
+    bit-identical.  Host-side object (hashable tuples only) — closable
+    over by jitted train steps.
     """
 
     treedef: Any
@@ -78,53 +118,146 @@ class ShardedFlatLayout:
     num_shards: int
     shard_size: int
     tile: int
+    group_keys: tuple[str, ...]         # group names, in layout order
+    leaf_group: tuple[int, ...]         # group index per leaf
+    group_sizes: tuple[int, ...]        # padded flat extent per group
+    group_shard_sizes: tuple[int, ...]  # = group_sizes[g] // num_shards
+    group_local_offsets: tuple[int, ...]  # column of group g in a shard
 
     @classmethod
     def from_params(cls, params: Params, num_shards: int,
-                    tile: int = BLOCK_N) -> "ShardedFlatLayout":
+                    tile: int = BLOCK_N,
+                    group_by: GroupBy | None = None) -> "ShardedFlatLayout":
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         if tile < 1:
             raise ValueError(f"tile must be >= 1, got {tile}")
-        leaves, treedef = jax.tree.flatten(params)
+        path_leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+        paths = tuple(path_names(p) for p, _ in path_leaves)
+        leaves = [l for _, l in path_leaves]
         shapes = tuple(tuple(l.shape) for l in leaves)
         dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
         sizes = tuple(math.prod(s) for s in shapes)
         padded_sizes = tuple(_round_up(s, tile) for s in sizes)
-        offsets, off = [], 0
-        for ps in padded_sizes:
-            offsets.append(off)
-            off += ps
-        padded_total = _round_up(max(off, tile), num_shards * tile)
+        keys = (["all"] * len(leaves) if group_by is None
+                else [str(group_by(p)) for p in paths])
+        group_keys: list[str] = []
+        leaf_group: list[int] = []
+        for k in keys:                       # group order = first appearance
+            if k not in group_keys:
+                group_keys.append(k)
+            leaf_group.append(group_keys.index(k))
+        if not group_keys:
+            group_keys = ["all"]             # empty-params edge case
+        # group-local leaf offsets (treedef order within each group)
+        offsets, cursor = [], [0] * len(group_keys)
+        for j, g in enumerate(leaf_group):
+            offsets.append(cursor[g])
+            cursor[g] += padded_sizes[j]
+        chunk = num_shards * tile
+        group_sizes = tuple(_round_up(max(c, tile), chunk) for c in cursor)
+        group_shard_sizes = tuple(gs // num_shards for gs in group_sizes)
+        group_local_offsets, col = [], 0
+        for gsn in group_shard_sizes:
+            group_local_offsets.append(col)
+            col += gsn
+        shard_size = col
         return cls(treedef, shapes, dtypes, sizes, padded_sizes,
-                   tuple(offsets), sum(sizes), padded_total, num_shards,
-                   padded_total // num_shards, tile)
+                   tuple(offsets), sum(sizes), num_shards * shard_size,
+                   num_shards, shard_size, tile, tuple(group_keys),
+                   tuple(leaf_group), group_sizes, group_shard_sizes,
+                   tuple(group_local_offsets))
+
+    # -- group geometry -----------------------------------------------------
+    @property
+    def num_groups(self) -> int:
+        return len(self.group_keys)
+
+    @property
+    def peak_gather_bytes(self) -> int:
+        """Per-device peak live gathered bytes of the layer-grouped
+        schedule: the largest single group's f32 extent (vs
+        :attr:`full_gather_bytes` for the ungrouped full-vector gather)."""
+        return max(self.group_sizes) * 4
+
+    @property
+    def full_gather_bytes(self) -> int:
+        """Per-device gathered bytes of the full-vector (PR-4) schedule."""
+        return self.padded_total * 4
+
+    def group_shard_bounds(self, g: int) -> tuple[int, int]:
+        """[start, stop) columns of group ``g`` within one shard's local
+        ``(shard_size,)`` slice (host ints)."""
+        if not 0 <= g < self.num_groups:
+            raise IndexError(g)
+        lo = self.group_local_offsets[g]
+        return lo, lo + self.group_shard_sizes[g]
+
+    def group_leaves(self, g: int) -> tuple[int, ...]:
+        """Leaf indices belonging to group ``g``, in treedef order."""
+        return tuple(j for j, lg in enumerate(self.leaf_group) if lg == g)
+
+    def group_table(self) -> list[dict]:
+        """Host-side summary, one entry per group (for logs / benches)."""
+        return [{"key": k,
+                 "elements": self.group_sizes[g],
+                 "bytes": self.group_sizes[g] * 4,
+                 "leaves": len(self.group_leaves(g))}
+                for g, k in enumerate(self.group_keys)]
 
     # -- ravel / unravel ----------------------------------------------------
-    def ravel(self, tree: Params) -> jax.Array:
-        """Pytree -> (padded_total,) f32; per-leaf tail padding is zero so
-        padding columns never contribute gradient (Adagrad on a zero grad
-        is the identity)."""
+    def ravel_group(self, g: int, tree: Params) -> jax.Array:
+        """Group ``g``'s leaves of ``tree`` -> contiguous
+        ``(group_sizes[g],)`` f32; per-leaf tail padding is zero so padding
+        columns never contribute gradient (Adagrad on a zero grad is the
+        identity)."""
         leaves = jax.tree.leaves(tree)
-        parts = []
-        for l, size, padded in zip(leaves, self.sizes, self.padded_sizes):
-            flat = l.reshape(-1).astype(jnp.float32)
-            if padded > size:
-                flat = jnp.pad(flat, (0, padded - size))
+        parts, used = [], 0
+        for j in self.group_leaves(g):
+            flat = leaves[j].reshape(-1).astype(jnp.float32)
+            if self.padded_sizes[j] > self.sizes[j]:
+                flat = jnp.pad(flat, (0, self.padded_sizes[j]
+                                      - self.sizes[j]))
             parts.append(flat)
-        tail = self.padded_total - (self.offsets[-1] + self.padded_sizes[-1]
-                                    if self.offsets else 0)
+            used += self.padded_sizes[j]
+        tail = self.group_sizes[g] - used
         if tail:
             parts.append(jnp.zeros((tail,), jnp.float32))
-        return jnp.concatenate(parts)
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def unravel_group(self, g: int, group_flat: jax.Array) -> list:
+        """Contiguous group flat -> that group's leaves (treedef order)."""
+        return [
+            group_flat[self.offsets[j]:self.offsets[j] + self.sizes[j]]
+            .reshape(self.shapes[j]).astype(self.dtypes[j])
+            for j in self.group_leaves(g)]
+
+    def unravel_groups(self, group_flats: list[jax.Array]) -> Params:
+        """Per-group contiguous flats -> the full pytree."""
+        leaves: list = [None] * len(self.sizes)
+        for g, gflat in enumerate(group_flats):
+            for j, leaf in zip(self.group_leaves(g),
+                               self.unravel_group(g, gflat)):
+                leaves[j] = leaf
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def ravel(self, tree: Params) -> jax.Array:
+        """Pytree -> (padded_total,) f32 in shard-major group order: shard
+        ``s``'s slice is the concatenation of every group's ``s``-th
+        sub-slice.  Single-group layouts reduce to plain concatenation
+        (the PR-4 ordering, bit-identical)."""
+        gfs = [self.ravel_group(g, tree).reshape(self.num_shards, -1)
+               for g in range(self.num_groups)]
+        if len(gfs) == 1:
+            return gfs[0].reshape(-1)
+        return jnp.concatenate(gfs, axis=1).reshape(-1)
 
     def unravel(self, flat: jax.Array) -> Params:
-        leaves = [
-            flat[o:o + n].reshape(s).astype(dt)
-            for o, n, s, dt in zip(self.offsets, self.sizes, self.shapes,
-                                   self.dtypes)
-        ]
-        return jax.tree.unflatten(self.treedef, leaves)
+        rows = flat.reshape(self.num_shards, self.shard_size)
+        gfs = [rows[:, lo:lo + gsn].reshape(-1)
+               for lo, gsn in zip(self.group_local_offsets,
+                                  self.group_shard_sizes)]
+        return self.unravel_groups(gfs)
 
     # -- shard geometry -----------------------------------------------------
     def shard_bounds(self, s: int) -> tuple[int, int]:
@@ -137,19 +270,26 @@ class ShardedFlatLayout:
         """Leaf indices whose (padded) extent overlaps shard ``s`` — what
         a per-leaf chain would have to launch on this shard."""
         lo, hi = self.shard_bounds(s)
-        return tuple(
-            j for j, (o, n) in enumerate(zip(self.offsets,
-                                             self.padded_sizes))
-            if o < hi and o + n > lo)
+        out = []
+        for j, (off, n) in enumerate(zip(self.offsets, self.padded_sizes)):
+            gsn = self.group_shard_sizes[self.leaf_group[j]]
+            # leaf j spans [off, off+n) of its group flat; shard s owns
+            # [s*gsn, (s+1)*gsn) of that group
+            if off < (s + 1) * gsn and off + n > s * gsn:
+                out.append(j)
+        return tuple(out)
 
 
 def init_sharded_flat_buffer(params: Params, buffer_size: int,
-                             num_shards: int, tile: int = BLOCK_N
+                             num_shards: int, tile: int = BLOCK_N,
+                             group_by: GroupBy | None = None
                              ) -> tuple[ShardedFlatLayout, dict]:
     """Sharded flat M-slot buffer: ``grads`` is ``(M, padded_total)`` and
     meant to live under a ``P(None, axis)`` sharding (columns split across
-    PS shards, slots replicated)."""
-    layout = ShardedFlatLayout.from_params(params, num_shards, tile)
+    PS shards, slots replicated).  ``group_by`` opts into the layer-grouped
+    layout (see :class:`ShardedFlatLayout`)."""
+    layout = ShardedFlatLayout.from_params(params, num_shards, tile,
+                                           group_by=group_by)
     return layout, {
         "grads": jnp.zeros((buffer_size, layout.padded_total), jnp.float32),
         "tokens": jnp.zeros((buffer_size,), jnp.int32),
@@ -231,7 +371,13 @@ def per_leaf_kernel_apply(layout: ShardedFlatLayout, param_flat: jax.Array,
     ``gba_apply`` call per leaf slice (``len(layout.sizes)`` launches vs
     one per shard).  Kernel arithmetic is identical per element, so this
     is the bit-exactness oracle for the fused sharded path — and the
-    launch-count baseline for ``benchmarks.bench_kernels``."""
+    launch-count baseline for ``benchmarks.bench_kernels``.  Single-group
+    layouts only: a layer-grouped layout interleaves leaves shard-major,
+    so no leaf is one contiguous global run."""
+    if layout.num_groups > 1:
+        raise ValueError(
+            "per_leaf_kernel_apply requires a single-group layout; "
+            f"got {layout.num_groups} groups {layout.group_keys}")
     from repro.kernels import ops
     new_p, new_a = param_flat, accum_flat
     for off, size in zip(layout.offsets, layout.sizes):

@@ -72,7 +72,8 @@ def aggregate_dense(grads_stacked: Params, tokens: jax.Array,
 
 def aggregate_embedding(ids_stacked: jax.Array, rows_stacked: jax.Array,
                         tokens: jax.Array, last_update: jax.Array,
-                        global_step: jax.Array, iota: int, capacity: int
+                        global_step: jax.Array, iota: int, capacity: int,
+                        valid: jax.Array | None = None
                         ) -> tuple[jax.Array, jax.Array]:
     """Per-ID sparse aggregation (Alg. 2 lines 21/23).
 
@@ -80,6 +81,8 @@ def aggregate_embedding(ids_stacked: jax.Array, rows_stacked: jax.Array,
     rows_stacked: (M, n, D) gradient rows aligned with ids
     tokens:       (M,) slot tokens
     last_update:  (capacity,) int32 global step each ID last saw
+    valid:        optional (M, n) bool — explicit padding mask; False
+                  slots are excluded outright
 
     A slot's row for an ID is kept iff the ID is *not* severely stale w.r.t.
     that slot's token: either the ID has not been updated since the token
@@ -87,19 +90,34 @@ def aggregate_embedding(ids_stacked: jax.Array, rows_stacked: jax.Array,
     staleness k - token is within iota.  Kept rows are summed and divided by
     the number of slots that touched the ID.
 
+    Padded batches: IDs outside ``[0, capacity)`` — the streamed kernels'
+    sentinel convention (``repro.kernels.embedding_bag`` maps batch
+    padding to an out-of-range sentinel) — are treated as padding and
+    contribute to NEITHER the dense aggregate NOR the per-ID contributor
+    counts (Alg. 2 line 23's divisor counts real contributors only).
+    Without the mask a padded slot would inflate ``counts`` for whatever
+    row its sentinel aliased (negative IDs wrap in XLA scatters) and
+    scatter ghost gradient rows into the aggregate.
+
     Returns (dense_grad (capacity, D), counts (capacity,)).
     """
     M, n = ids_stacked.shape
     D = rows_stacked.shape[-1]
+    # padding mask: the kernels' sentinel-ID convention, optionally ANDed
+    # with an explicit caller mask
+    in_range = (ids_stacked >= 0) & (ids_stacked < capacity)     # (M, n)
+    if valid is not None:
+        in_range = in_range & valid
+    safe_ids = jnp.where(in_range, ids_stacked, 0)
     # slot-level hard threshold (same Eq. (1) clock)...
     slot_ok = (global_step - tokens) <= iota                     # (M,)
     # ...relaxed per-ID: if the ID was never updated after the token was
     # issued, its gradient is exact regardless of slot staleness.
-    id_last = last_update[ids_stacked]                           # (M, n)
+    id_last = last_update[safe_ids]                              # (M, n)
     id_fresh = id_last <= tokens[:, None]
-    keep = (slot_ok[:, None] | id_fresh)                         # (M, n)
+    keep = (slot_ok[:, None] | id_fresh) & in_range              # (M, n)
 
-    flat_ids = ids_stacked.reshape(-1)
+    flat_ids = safe_ids.reshape(-1)
     flat_keep = keep.reshape(-1).astype(jnp.float32)
     flat_rows = rows_stacked.reshape(-1, D).astype(jnp.float32)
     flat_rows = flat_rows * flat_keep[:, None]

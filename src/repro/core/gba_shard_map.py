@@ -16,13 +16,21 @@ genuinely differ per device (e.g. heterogeneous data streams).
 :func:`make_gba_fused_psum_step` is the fused rendering of the same
 mapping: every device doubles as a PS shard owning a contiguous
 tile-aligned slice of the flat parameter vector
-(``core.flat_sharded.ShardedFlatLayout``).  Workers all-gather the flat
-params for the forward, then an ``all_to_all`` routes each worker's
-gradient slice to its owning shard — the PS "write", worker->shard only,
-never shard<->shard — building the ``(M, shard_size)`` buffer on which
-ONE ``gba_apply`` launch does the token-decay aggregation AND the Adagrad
-update.  The only ``psum`` left is the scalar loss; the per-leaf
-aggregate -> optimizer chain (and its per-leaf launches) is gone.
+(``core.flat_sharded.ShardedFlatLayout``).  The collective schedule is
+**layer-grouped**: parameters are gathered one layer group at a time for
+the forward, and each group's gradient is routed to its owning shards by
+its own ``all_to_all`` — issued as soon as the backward materializes that
+group's gradient, so routing overlaps the remaining backward compute
+instead of serializing one monolithic exchange after it.  Peak live
+gathered bytes per device is the LARGEST group
+(``layout.peak_gather_bytes``), not the whole parameter vector — the
+property that lets a PS shard serve models larger than one device's
+gather budget.  A single-group layout (``group_by=None``) degenerates to
+the PR-4 full-vector schedule, which the parity tests use as the
+bit-exactness oracle.  Either way the per-shard apply stays ONE
+``gba_apply`` launch (token-decay aggregation + Adagrad in one VMEM pass)
+on the contiguous ``(M, shard_size)`` slice; the only ``psum`` left is
+the scalar loss.
 """
 from __future__ import annotations
 
@@ -75,7 +83,8 @@ def make_gba_fused_psum_step(mesh: Mesh, loss_fn: Callable,
                              lr: float, eps: float = 1e-10,
                              axis: str = "data",
                              interpret: bool | None = None):
-    """Fused PS rendering of :func:`make_gba_psum_step` (Adagrad only).
+    """Layer-grouped fused PS rendering of :func:`make_gba_psum_step`
+    (Adagrad only).
 
     Returns ``step(param_flat, accum_flat, batch, tokens, gstep) ->
     (new_param_flat, new_accum_flat, loss)`` where ``param_flat`` /
@@ -83,27 +92,46 @@ def make_gba_fused_psum_step(mesh: Mesh, loss_fn: Callable,
     ``P(axis)`` and ``tokens`` is (M,) — one per worker, M = mesh
     ``axis`` size.
 
-    Collective schedule per global step (DCN/ICI traffic in parens):
+    Collective schedule per global step (DCN/ICI traffic in parens), with
+    G = ``layout.num_groups`` layer groups:
 
-    1. ``all_gather`` the flat param slices for the forward (the FSDP
-       gather a sharded PS must pay anyway);
-    2. each worker grads its OWN batch shard with its OWN token;
-    3. ``all_to_all`` routes worker ``w``'s gradient slice ``s`` to shard
-       ``s`` — building the ``(M, shard_size)`` buffer in place of a
-       full-gradient ``psum`` (same bytes as a reduce-scatter, none of it
-       shard<->shard);
+    1. per layer group ``g``: ``all_gather`` that group's param
+       sub-slices just-in-time for the forward (``group_sizes[g]`` f32
+       per device per group).  The gathers are G independent ops, each
+       feeding only its group's layers, so the scheduler can free a
+       group's gathered copy once its last consumer runs — peak LIVE
+       gathered bytes is ``layout.peak_gather_bytes`` (the largest
+       group), not the ``padded_total`` a monolithic gather pins;
+    2. each worker grads its OWN batch shard with its OWN token, against
+       the gathered (not the sharded) params — gradients stay per-worker,
+       never summed;
+    3. per layer group ``g``: ``all_to_all`` routes worker ``w``'s
+       sub-slice ``s`` of that group's gradient to shard ``s`` — the PS
+       "write", worker->shard only, never shard<->shard.  Each exchange
+       depends only on ITS group's gradient, so it issues as soon as the
+       backward materializes that group and overlaps the backward compute
+       of the groups still in flight (same total bytes as one
+       reduce-scatter, pipelined instead of serialized after the
+       backward).  Concatenating the G per-group ``(M,
+       group_shard_sizes[g])`` blocks along columns yields the local
+       ``(M, shard_size)`` buffer — contiguous because the layout is
+       shard-major (see ``ShardedFlatLayout``);
     4. ONE ``gba_apply`` launch per shard fuses decay-aggregate + Adagrad
        on the local slice — the decay weights come from the broadcast
        ``(tokens, gstep)`` scalars, identically on every shard;
     5. ``psum`` of the decayed scalar loss — the only cross-shard
        reduction left.
+
+    With a single-group layout steps 1 and 3 collapse to one
+    ``all_gather`` + one ``all_to_all``: exactly the PR-4 full-vector
+    schedule, bit-exact with this one (the kernel arithmetic is
+    per-element and column order within a shard is irrelevant to it).
     """
     m = mesh.shape[axis]
     if layout.num_shards != m:
         raise ValueError(
             f"layout has {layout.num_shards} shards but mesh axis "
             f"{axis!r} has {m} devices")
-    shard_n = layout.shard_size
     from repro.kernels import ops
 
     @functools.partial(
@@ -112,21 +140,33 @@ def make_gba_fused_psum_step(mesh: Mesh, loss_fn: Callable,
         out_specs=(P(axis), P(axis), P()),
         check_rep=False)
     def step(param_flat, accum_flat, batch, token, gstep):
-        param_full = lax.all_gather(param_flat, axis, axis=0, tiled=True)
-        params = layout.unravel(param_full)
-        loss, g = jax.value_and_grad(loss_fn)(params, batch)
-        # worker w's flat gradient, rows = destination shards; all_to_all
-        # leaves row w of shard s holding worker w's slice s: the (M,
-        # shard_size) buffer gba_apply consumes, built without any
-        # shard<->shard exchange
-        gm = layout.ravel(g).reshape(m, shard_n)
-        buf = lax.all_to_all(gm, axis, split_axis=0, concat_axis=0,
-                             tiled=True)
+        # 1. just-in-time per-group gathers: tiled all_gather of shard
+        # sub-slices reconstructs each group's contiguous flat because
+        # the layout is shard-major within a group
+        gathered = []
+        for g in range(layout.num_groups):
+            lo, hi = layout.group_shard_bounds(g)
+            gathered.append(
+                lax.all_gather(param_flat[lo:hi], axis, axis=0, tiled=True))
+        params = layout.unravel_groups(gathered)
+        # 2. per-worker gradient against the gathered params
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        # 3. per-group routing: worker w's rows = destination shards;
+        # all_to_all leaves row w of shard s holding worker w's sub-slice
+        # s of THIS group — issued per group as the backward yields it
+        bufs = []
+        for g in range(layout.num_groups):
+            gm = layout.ravel_group(g, grads).reshape(m, -1)
+            bufs.append(lax.all_to_all(gm, axis, split_axis=0,
+                                       concat_axis=0, tiled=True))
+        buf = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs, axis=1)
+        # 4. one fused apply launch on the contiguous local slice
         tokens_all = lax.all_gather(token.reshape(-1)[:1], axis, axis=0,
                                     tiled=True)
         new_p, new_a = ops.gba_apply_flat(
             param_flat, accum_flat, buf, tokens_all, gstep, lr, iota=iota,
             eps=eps, interpret=interpret)
+        # 5. scalar-loss psum — the only cross-shard reduction
         w = threshold_decay(token.reshape(-1)[:1], gstep, iota)[0]
         loss = lax.psum(loss * w, axis) / m
         return new_p, new_a, loss

@@ -32,6 +32,17 @@ def token_list(num_batches: int, buffer_size: int) -> jnp.ndarray:
     return jnp.arange(num_batches, dtype=jnp.int32) // buffer_size
 
 
+class TokenListExhausted(IndexError):
+    """Raised by :meth:`TokenList.fetch` past the last token.
+
+    Deliberately NOT ``StopIteration``: PEP 479 makes a ``StopIteration``
+    escaping a generator frame mutate into ``RuntimeError``, so a
+    generator-based dispatch loop draining a TokenList could never catch
+    the exhaustion signal under its real name.  Subclasses ``IndexError``
+    (fetch-past-the-end is an out-of-range access), so ``except
+    IndexError`` works too."""
+
+
 class TokenList:
     """Stateful FIFO view used by the PS-side of the simulator/trainer.
 
@@ -45,7 +56,8 @@ class TokenList:
 
     def fetch(self) -> int:
         if self._next >= self._num_batches:
-            raise StopIteration("token list exhausted")
+            raise TokenListExhausted(
+                f"token list exhausted after {self._num_batches} fetches")
         tok = self._next // self._m
         self._next += 1
         return tok

@@ -28,6 +28,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.flat_sharded import path_names as _path_names
 
 
 def data_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -44,16 +45,6 @@ def _fits(dim: int, mesh: Mesh, axis: str) -> bool:
 
 def _maybe(dim: int, mesh: Mesh, axis: str) -> str | None:
     return axis if _fits(dim, mesh, axis) else None
-
-
-def _path_names(path) -> list[str]:
-    names = []
-    for e in path:
-        if hasattr(e, "key"):
-            names.append(str(e.key))
-        elif hasattr(e, "idx"):
-            names.append(f"#{e.idx}")
-    return names
 
 
 def _leaf_spec(names: list[str], shape: tuple[int, ...], mesh: Mesh) -> P:
@@ -179,13 +170,19 @@ def flat_slice_specs(layout: Any, mesh: Mesh, axis: str = "data") -> dict:
     """PartitionSpecs for a ShardedFlatLayout's state: flat param/accum
     vectors split over ``axis`` (each PS shard owns one contiguous
     tile-aligned slice), buffer columns likewise with the M slot axis
-    replicated, slot tokens / fill / step scalars replicated.
+    replicated, slot tokens / fill / step scalars replicated.  The specs
+    are grouping-agnostic — a layer-grouped layout orders the flat axis
+    shard-major, so ``P(axis)`` still hands every shard one contiguous
+    slice containing its sub-slice of every layer group.
 
     Validates the layout geometry against the mesh: the layout must have
-    exactly one shard per device on ``axis`` and its padded total must
-    split evenly (both guaranteed by ``ShardedFlatLayout.from_params``;
-    re-checked here so a stale layout fails loudly at spec-build time
-    rather than as an XLA shape error inside shard_map).
+    exactly one shard per device on ``axis``, its padded total must split
+    evenly, and its layer-group table must be self-consistent (every
+    group a whole number of ``num_shards * tile`` chunks summing to the
+    padded total, every leaf assigned to a real group).  All guaranteed
+    by ``ShardedFlatLayout.from_params``; re-checked here so a stale or
+    hand-built layout fails loudly at spec-build time rather than as an
+    XLA shape error inside shard_map.
     """
     if axis not in mesh.axis_names:
         raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
@@ -198,6 +195,18 @@ def flat_slice_specs(layout: Any, mesh: Mesh, axis: str = "data") -> dict:
         raise ValueError(
             f"layout padded_total {layout.padded_total} != "
             f"{layout.num_shards} * {layout.shard_size}")
+    chunk = layout.num_shards * layout.tile
+    for key, gs in zip(layout.group_keys, layout.group_sizes):
+        if gs % chunk:
+            raise ValueError(
+                f"layer group {key!r} extent {gs} is not a multiple of "
+                f"num_shards * tile = {chunk}")
+    if sum(layout.group_sizes) != layout.padded_total:
+        raise ValueError(
+            f"layer groups cover {sum(layout.group_sizes)} elements, "
+            f"layout padded_total is {layout.padded_total}")
+    if any(g >= len(layout.group_keys) for g in layout.leaf_group):
+        raise ValueError("leaf_group indexes past the group table")
     return {
         "flat": P(axis),
         "buffer": {

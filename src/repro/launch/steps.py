@@ -142,7 +142,8 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
 def init_fused_train_state(params: Any, gba: GBAConfig,
                            initial_accum: float = 0.1,
                            mesh: Mesh | None = None, axis: str = "data",
-                           tile: int | None = None):
+                           tile: int | None = None,
+                           layer_groups: bool = True):
     """State for the fused flat-buffer GBA step: params stay a pytree (the
     model consumes them), the Adagrad accumulator and the M-slot gradient
     buffer live flat.  Returns (layout, state).
@@ -150,14 +151,22 @@ def init_fused_train_state(params: Any, gba: GBAConfig,
     With a ``mesh`` whose ``axis`` has >1 device the flat arrays use the
     sharding-aware :class:`repro.core.flat_sharded.ShardedFlatLayout`
     (leaf- and tile-aligned slices, one per PS shard); otherwise the
-    single-host ``FlatLayout``.
+    single-host ``FlatLayout``.  ``layer_groups`` (default on) makes the
+    sharded layout layer-grouped under the model's canonical grouping
+    (``models.transformer.param_group_key``): each layer group's extent
+    is contiguous and shard-aligned, so the layer-grouped collective
+    schedule (``core.gba_shard_map.make_gba_fused_psum_step``) gathers
+    one group at a time — per-device peak gathered bytes is the largest
+    group (``layout.peak_gather_bytes``), not the whole vector.  Pass
+    ``layer_groups=False`` for the ungrouped PR-4 layout.
     """
     if mesh is not None and mesh.shape[axis] > 1:
         from repro.core.flat_sharded import init_sharded_flat_buffer
         from repro.kernels.gba_apply import BLOCK_N
         layout, buffer = init_sharded_flat_buffer(
             params, gba.buffer_size, mesh.shape[axis],
-            tile or BLOCK_N)
+            tile or BLOCK_N,
+            group_by=T.param_group_key if layer_groups else None)
         total = layout.padded_total
     else:
         from repro.core.gba import init_flat_buffer

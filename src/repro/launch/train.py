@@ -20,7 +20,11 @@ holds O(block) scratch; see repro.kernels.embedding_bag).
 mesh instead of the smoke/production default; with ``--fused`` the GBA
 state uses the sharding-aware flat layout — buffer columns sliced across
 the ``data`` axis, ONE ``gba_apply`` launch per PS shard per global step
-(core.flat_sharded).  On CPU, pair it with ``--host-devices N`` to force
+(core.flat_sharded).  ``--layer-groups`` (default on for ``--fused`` with
+a multi-device ``--mesh``) makes that layout layer-grouped under the
+model's canonical grouping, so the grouped collective schedule
+(core.gba_shard_map) gathers one layer group at a time — per-device peak
+gathered bytes is the largest group, not the whole flat vector.  On CPU, pair it with ``--host-devices N`` to force
 N host-platform devices (sets ``--xla_force_host_platform_device_count``
 before jax device init — the same path the shard_map tests use):
 
@@ -137,6 +141,14 @@ def main() -> None:
     ap.add_argument("--mesh", default="",
                     help="explicit DATAxMODEL mesh, e.g. 4x1; overrides "
                          "the smoke/production default")
+    ap.add_argument("--layer-groups", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="layer-grouped flat layout for the sharded fused "
+                         "state: per-group contiguous shard-aligned "
+                         "slices, so the grouped collective schedule "
+                         "gathers one layer group at a time (peak gather "
+                         "= largest group, not N_total).  auto = on for "
+                         "--fused with a multi-device --mesh")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N host-platform devices before jax device "
                          "init (CPU test path for --mesh)")
@@ -192,9 +204,16 @@ def main() -> None:
                     staleness_tolerance=args.iota)
     stream = make_lm_stream(cfg.vocab_size, args.seq, args.batch, seed=0)
 
+    # keyed off the actual mesh, not --mesh: the sharded fused path (and
+    # so the grouped layout) engages whenever the data axis is >1 wide,
+    # including the production default mesh
+    multi_dev = mesh.shape["data"] > 1
+    layer_groups = (args.layer_groups == "on"
+                    or (args.layer_groups == "auto" and fused and multi_dev))
     with mesh:
         if fused:
-            layout, state = init_fused_train_state(params, gba, mesh=mesh)
+            layout, state = init_fused_train_state(
+                params, gba, mesh=mesh, layer_groups=layer_groups)
             step_fn = jax.jit(
                 make_fused_train_step(cfg, gba, layout, lr=args.lr,
                                       mesh=mesh),
@@ -212,6 +231,15 @@ def main() -> None:
                       f"(shard_size={layout.shard_size}, "
                       f"tile={layout.tile}; 1 apply launch/shard vs "
                       f"{len(layout.sizes)} per-leaf)")
+                if layout.num_groups > 1:
+                    table = ", ".join(
+                        f"{r['key']}={r['bytes'] / 1e6:.2f}MB"
+                        for r in layout.group_table())
+                    print(f"layer groups ({layout.num_groups}): {table}; "
+                          f"peak_gather="
+                          f"{layout.peak_gather_bytes / 1e6:.2f}MB vs "
+                          f"full_gather="
+                          f"{layout.full_gather_bytes / 1e6:.2f}MB")
             else:
                 print(f"fused gba_apply path (Adagrad): flat buffer "
                       f"({gba.buffer_size}, {layout.total})")

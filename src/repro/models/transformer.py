@@ -466,3 +466,34 @@ def forward_hidden(params: Params, cfg: ModelConfig, tokens: jax.Array,
 
 def param_count(params: Params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# layer groups: how the sharded fused-PS step consumes these params
+# ---------------------------------------------------------------------------
+
+def param_group_key(path_names: tuple[str, ...]) -> str:
+    """Canonical layer-group for a param pytree path (the grouping the
+    layer-grouped ``ShardedFlatLayout`` / ``make_gba_fused_psum_step``
+    use).  Groups follow the order the forward consumes params — embed,
+    then each prefix layer, then each scanned block-pattern position (one
+    group per ``l{i}``, its leaves stacked over ``num_repeats``), then the
+    tail norms/head — so a just-in-time per-group ``all_gather`` never
+    holds more than one group's worth of gathered params live at once.
+
+    Path grammar (see :func:`init_model`): top-level keys ``embed``,
+    ``lm_head``, ``final_norm``, ``prefix`` (list), ``blocks`` (dict of
+    ``l{i}``), ``shared_attn``, ``encoder``, ``enc_norm``.
+    """
+    if not path_names:
+        return "misc"
+    head = path_names[0]
+    if head == "blocks" and len(path_names) > 1:
+        return f"blocks.{path_names[1]}"       # one group per pattern slot
+    if head == "prefix" and len(path_names) > 1:
+        return f"prefix.{path_names[1]}"       # one group per prefix layer
+    if head == "lm_head":
+        return "head"
+    # embed, final_norm, shared_attn, encoder, enc_norm, ...: one group per
+    # top-level module (norms are tiny; their groups pad to one tile/shard)
+    return head

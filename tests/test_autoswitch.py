@@ -19,6 +19,33 @@ def test_speedup_estimate_straggler():
     assert abs(s - 1510.0 / 160.0) < 1e-9
 
 
+def test_empty_window_keeps_mode():
+    """An empty telemetry window (all workers stalled / scrape raced the
+    first completion) is no signal: estimate_speedup must not crash on
+    min() of nothing, and decide keeps the current mode — in BOTH
+    modes."""
+    c = AutoSwitchController()
+    assert np.isnan(c.estimate_speedup([]))
+    assert c.decide([]) == "sync"
+    c.decide(np.array([100.0] * 15 + [10.0]))   # genuine straggler -> gba
+    assert c.mode == "gba"
+    assert c.decide([]) == "gba"
+    assert c.decide(np.array([])) == "gba"
+
+
+def test_history_stays_bounded():
+    """history must not grow without bound on long runs: capped at
+    max_history, keeping the most recent entries."""
+    c = AutoSwitchController(max_history=16)
+    for i in range(100):
+        c.decide(np.full(4, 100.0 + i))
+    assert len(c.history) == 16
+    # most recent decision retained, oldest dropped
+    assert c.history[-1][1] == c.mode
+    speedups = [s for s, _ in c.history]
+    assert all(abs(s - 1.0) < 1e-9 for s in speedups)
+
+
 def test_hysteresis():
     c = AutoSwitchController(switch_up=1.5, switch_down=1.15)
     assert c.mode == "sync"

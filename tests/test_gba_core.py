@@ -1,13 +1,15 @@
 """Unit tests for the GBA core: token list, decay, aggregation semantics,
 per-ID embedding treatment, buffer-as-train-step-transform."""
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (TokenList, aggregate_dense, aggregate_embedding,
-                        buffer_push_and_maybe_apply, decay_weights,
-                        init_buffer, num_global_steps, token_for_batch,
-                        token_list)
+from repro.core import (TokenList, TokenListExhausted, aggregate_dense,
+                        aggregate_embedding, buffer_push_and_maybe_apply,
+                        decay_weights, init_buffer, num_global_steps,
+                        token_for_batch, token_list)
 
 
 def test_token_list_construction():
@@ -21,6 +23,34 @@ def test_token_list_construction():
 def test_token_list_stateful():
     tl = TokenList(6, 2)
     assert [tl.fetch() for _ in range(6)] == [0, 0, 1, 1, 2, 2]
+
+
+def test_token_list_exhaustion_is_not_stop_iteration():
+    """fetch past the end raises TokenListExhausted (an IndexError) — NOT
+    StopIteration, which PEP 479 silently mutates into RuntimeError when
+    it escapes a generator frame, making the exhaustion signal
+    uncatchable by name inside generator-based dispatch loops."""
+    tl = TokenList(2, 1)
+    tl.fetch(), tl.fetch()
+    with pytest.raises(TokenListExhausted):
+        tl.fetch()
+    assert not issubclass(TokenListExhausted, StopIteration)
+    assert issubclass(TokenListExhausted, IndexError)
+
+    # the PEP 479 trap this guards against: a generator draining the list
+    # must see the real exception, not a RuntimeError
+    def dispatch(tlist):
+        while True:
+            yield tlist.fetch()
+
+    gen = dispatch(TokenList(2, 1))
+    got = []
+    try:
+        for tok in gen:
+            got.append(tok)
+    except TokenListExhausted:
+        pass                      # catchable under its own name
+    assert got == [0, 1]
 
 
 def test_decay_threshold():
@@ -75,6 +105,45 @@ def test_aggregate_embedding_contributor_normalization():
                                         jnp.int32(5), iota=1, capacity=2)
     np.testing.assert_allclose(np.asarray(counts[0]), 2.0)
     np.testing.assert_allclose(np.asarray(dense[0]), np.full(3, 3.0))
+
+
+def test_aggregate_embedding_padded_batch():
+    """Regression: padded/sentinel slots must not inflate the per-ID
+    contributor counts (Alg. 2 line 23's divisor) or scatter ghost rows.
+    Uses the kernels' sentinel convention — any ID outside [0, capacity)
+    is padding (repro.kernels.embedding_bag maps padding to an
+    out-of-range sentinel); negative IDs used to wrap around and pollute
+    real rows."""
+    capacity = 4
+    # slot 0: real id 0 + sentinel (== capacity); slot 1: real id 0 + -1 pad
+    ids = jnp.array([[0, capacity], [0, -1]], jnp.int32)
+    rows = jnp.stack([jnp.stack([jnp.full((3,), 2.0), jnp.full((3,), 9.0)]),
+                      jnp.stack([jnp.full((3,), 4.0), jnp.full((3,), 9.0)])])
+    tokens = jnp.array([5, 5], jnp.int32)
+    last_update = jnp.zeros((capacity,), jnp.int32)
+    dense, counts = aggregate_embedding(ids, rows, tokens, last_update,
+                                        jnp.int32(5), iota=1,
+                                        capacity=capacity)
+    # id 0: exactly the two real contributors -> mean (2+4)/2, count 2
+    np.testing.assert_allclose(np.asarray(counts), [2, 0, 0, 0])
+    np.testing.assert_allclose(np.asarray(dense[0]), np.full(3, 3.0))
+    # the -1 pad must NOT wrap to the last row, the sentinel row must not
+    # exist at all
+    np.testing.assert_allclose(np.asarray(dense[1:]), np.zeros((3, 3)))
+
+
+def test_aggregate_embedding_explicit_valid_mask():
+    """An explicit valid mask excludes in-range slots too (e.g. a worker
+    marking half a batch invalid after a data error)."""
+    ids = jnp.array([[0], [0]], jnp.int32)
+    rows = jnp.stack([jnp.full((1, 3), 2.0), jnp.full((1, 3), 4.0)])
+    tokens = jnp.array([5, 5], jnp.int32)
+    last_update = jnp.zeros((2,), jnp.int32)
+    dense, counts = aggregate_embedding(
+        ids, rows, tokens, last_update, jnp.int32(5), iota=1, capacity=2,
+        valid=jnp.array([[True], [False]]))
+    np.testing.assert_allclose(np.asarray(counts), [1, 0])
+    np.testing.assert_allclose(np.asarray(dense[0]), np.full(3, 2.0))
 
 
 def test_buffer_push_and_apply():
