@@ -62,9 +62,17 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
     grow) vs ``full_gather_bytes`` (what the PR-4 full-vector gather
     pinned = padded_total f32).  Grouping does not change the timed
     launch: the per-shard slice stays one contiguous run and the apply
-    stays one ``gba_apply`` call."""
+    stays one ``gba_apply`` call.
+
+    The ``audit_*`` columns come from the static auditor
+    (``repro.analysis``): the fused step's collective census under an
+    abstract mesh at this shard count, and the kernel VMEM recomputed
+    from the exported launch meta — gated EXACTLY by ``run --check``."""
+    from repro.analysis.audit import probe_loss, trace_fused_step
+    from repro.analysis.jaxpr_audit import census_counts, collective_census
     from repro.core.flat_sharded import ShardedFlatLayout
     from repro.configs import get_config
+    from repro.kernels.gba_apply import launch_meta
     from repro.models import transformer as T
 
     cfg = get_config("granite-8b").reduced()
@@ -76,6 +84,17 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
         layout = ShardedFlatLayout.from_params(pshapes, shards,
                                                group_by=T.param_group_key)
         sn = layout.shard_size
+        # auditor-derived structural columns, gated EXACTLY (run --check):
+        # the fused step's collective census under an abstract mesh at
+        # this shard count, and the kernel VMEM recomputed from the
+        # exported launch meta — any drift means the collective schedule
+        # or the launch geometry changed and the baseline must be
+        # regenerated deliberately
+        census = census_counts(collective_census(trace_fused_step(
+            layout, shards, probe_loss,
+            {"x": jax.ShapeDtypeStruct((shards * 8,), jnp.float32)})))
+        meta = launch_meta(sn, m)
+        audit_vmem = meta.vmem_bytes(meta.vmem_counted)
         key = jax.random.PRNGKey(shards)
         p = jax.random.normal(key, (sn,))
         ac = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (sn,)))
@@ -97,6 +116,9 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
             f"launches_per_apply=1;per_leaf_launches={n_leaves};"
             f"launch_ratio={ratio:.1f};"
             f"vmem_bytes={apply_vmem_bytes(m)};"
+            f"audit_all_gather={census.get('all_gather', 0)};"
+            f"audit_all_to_all={census.get('all_to_all', 0)};"
+            f"audit_vmem_bytes={audit_vmem};"
             f"layer_groups={layout.num_groups};"
             f"peak_gather_bytes={layout.peak_gather_bytes};"
             f"full_gather_bytes={layout.full_gather_bytes};"

@@ -13,7 +13,8 @@ baseline JSON (default ``BENCH_kernels.json``) and exits non-zero on a
 >5x ``us_per_call`` regression (interpret-mode wall time is load noise;
 only catastrophic algorithmic blowups should trip it), any growth of a
 ``vmem_bytes``, ``buffer_ratio`` or ``peak_gather_bytes`` column, any
-shrink of a ``launch_ratio`` column, a
+shrink of a ``launch_ratio`` column, any change at all of an ``audit_*``
+column (auditor-derived collective census / launch-meta VMEM), a
 baseline row that disappeared, or a fresh row missing from the baseline
 (uncommitted drift: adding a bench row without regenerating and
 committing the JSON fails fast) — the CI perf gate (scripts/ci.sh).
@@ -37,6 +38,11 @@ US_REGRESSION = 5.0
 MONOTONE_COLS = ("vmem_bytes", "buffer_ratio",
                  "peak_gather_bytes")            # --check: no growth at all
 FLOOR_COLS = ("launch_ratio",)                   # --check: no shrink at all
+# --check: must EQUAL the baseline.  Auditor-derived structural columns
+# (collective census counts, launch-meta VMEM): any drift means the
+# collective schedule or kernel geometry changed, which must be a
+# deliberate baseline regeneration, never noise.
+EXACT_COLS = ("audit_all_gather", "audit_all_to_all", "audit_vmem_bytes")
 
 
 def parse_derived(derived: str) -> dict:
@@ -119,6 +125,15 @@ def check_records(fresh: list[dict], baseline_path: str) -> list[str]:
                 elif c_val < base[col]:
                     failures.append(
                         f"{name}: {col} shrank {base[col]:g} -> {c_val:g}")
+        for col in EXACT_COLS:
+            if col in base and isinstance(base[col], float):
+                c_val = cur.get(col)
+                if c_val is None:
+                    failures.append(f"{name}: {col} column disappeared")
+                elif c_val != base[col]:
+                    failures.append(
+                        f"{name}: {col} changed {base[col]:g} -> "
+                        f"{c_val:g} (exact-gated auditor column)")
     return failures
 
 
@@ -207,7 +222,7 @@ def main() -> None:
         print(f"suite.json,0.0,wrote={args.json};rows={len(records)}",
               flush=True)
     if args.summary and records:
-        gated = MONOTONE_COLS + FLOOR_COLS
+        gated = MONOTONE_COLS + FLOOR_COLS + EXACT_COLS
         print(f"{'gated row':<55} {'us/call':>10}  gated columns")
         for r in records:
             cols = " ".join(f"{k}={r[k]:g}" for k in gated

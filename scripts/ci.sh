@@ -25,11 +25,18 @@
 #     git — gating fresh numbers against a locally-edited baseline is
 #     meaningless (skipped outside a git checkout).
 #  4. the full test suite (property tests auto-skip without hypothesis).
-#  5. kernel micro-benchmarks in --check mode: fresh rows are gated
+#  5. static audit: python -m repro.analysis --check traces (never runs)
+#     every registered arch's hot paths against the rule registry —
+#     collective census vs the declared layer-grouped schedule, scalar-
+#     only psum, decode collective-free, dtype/donation/retrace lints,
+#     and the Pallas tile/VMEM/grid checks over exported launch metas.
+#     Any unsuppressed finding fails the lane with its rule ID.
+#  6. kernel micro-benchmarks in --check mode: fresh rows are gated
 #     against the committed BENCH_kernels.json (>5x us_per_call
 #     regression — interpret-mode wall time is load noise, only
 #     catastrophic blowups should trip it — any vmem_bytes/buffer_ratio
-#     growth, any launch_ratio shrink, a disappeared row, or a fresh row
+#     growth, any launch_ratio shrink, any change of an exact-gated
+#     audit_* column, a disappeared row, or a fresh row
 #     missing from the committed baseline — i.e. uncommitted drift — all
 #     fail) before the fresh JSON is written for the perf trajectory;
 #     --summary prints the one-line-per-row table of gated rows.
@@ -59,6 +66,9 @@ if [ -n "${CI_SLOW:-}" ]; then
 else
     python -m pytest -q
 fi
+
+echo "== static audit (hot-path rules, all archs) =="
+python -m repro.analysis --check
 
 echo "== kernel perf gate =="
 python -m benchmarks.run --only kernels --fast --check --summary \

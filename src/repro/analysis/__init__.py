@@ -1,0 +1,43 @@
+"""Hot-path static auditor: traced (never executed) invariant checks.
+
+Three rule families over the compiled hot paths — jaxpr collective
+census + dtype/donation lints (``jaxpr_audit``), Pallas tile/VMEM/grid
+checks over exported launch metadata (``pallas_check``), and the
+retrace guard (``retrace_guard``) — wired into the per-arch matrix in
+``audit`` and the ``python -m repro.analysis`` CLI.  Rule IDs, what each
+guarantees, and the suppression syntax live in ``rules`` and
+``src/repro/analysis/README.md``.
+"""
+from repro.analysis.audit import (AuditReport, audit_arch, audit_kernels,
+                                  kernel_metas, run_audit,
+                                  trace_fused_step, widening_budget)
+from repro.analysis.jaxpr_audit import (Collective, census_counts,
+                                        check_donation,
+                                        check_fused_psum_schedule,
+                                        check_no_collectives, check_no_f64,
+                                        check_scalar_psum_only,
+                                        check_sync_psum_schedule,
+                                        check_widening_budget,
+                                        collective_census,
+                                        expected_fused_collectives,
+                                        iter_eqns, undonated_paths,
+                                        widening_converts)
+from repro.analysis.pallas_check import (check_grid_bounds, check_launch,
+                                         check_tiles, check_vmem)
+from repro.analysis.retrace_guard import check_retrace, count_traces
+from repro.analysis.rules import (RULES, Finding, apply_suppressions,
+                                  finding, is_suppressed,
+                                  parse_suppressions)
+
+__all__ = [
+    "AuditReport", "Collective", "Finding", "RULES",
+    "apply_suppressions", "audit_arch", "audit_kernels", "census_counts",
+    "check_donation", "check_fused_psum_schedule", "check_grid_bounds",
+    "check_launch", "check_no_collectives", "check_no_f64",
+    "check_retrace", "check_scalar_psum_only", "check_sync_psum_schedule",
+    "check_tiles", "check_vmem", "check_widening_budget",
+    "collective_census", "count_traces", "expected_fused_collectives",
+    "finding", "is_suppressed", "iter_eqns", "kernel_metas",
+    "parse_suppressions", "run_audit", "trace_fused_step",
+    "undonated_paths", "widening_budget", "widening_converts",
+]

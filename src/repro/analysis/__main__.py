@@ -1,0 +1,93 @@
+"""CLI: audit every registered arch config against the hot-path rules.
+
+    PYTHONPATH=src python -m repro.analysis --check            # CI gate
+    PYTHONPATH=src python -m repro.analysis --arch granite-8b
+    PYTHONPATH=src python -m repro.analysis --check \
+        --suppress GBA-TILE-001@granite-8b/kernels/gba_apply
+    PYTHONPATH=src python -m repro.analysis --markdown >> "$GITHUB_STEP_SUMMARY"
+
+Exit status under ``--check`` is the number of unsuppressed findings
+(0 == every audited hot path clean).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.analysis.audit import AUDIT_M, run_audit
+from repro.analysis.rules import RULES
+from repro.configs import ARCH_IDS
+
+
+def render_text(reports, elapsed: float) -> str:
+    lines = []
+    for rep in reports:
+        mark = "ok" if rep.ok else f"{len(rep.findings)} FINDINGS"
+        stats = " ".join(f"{k}={v}" for k, v in rep.stats.items())
+        lines.append(f"[{mark:>11s}] {rep.name}" + (f"  ({stats})"
+                                                    if stats else ""))
+        for f in rep.findings:
+            lines.append(f"    FAIL {f}")
+        for f in rep.suppressed:
+            lines.append(f"    supp {f.rule} @ {f.site}")
+    total = sum(len(r.findings) for r in reports)
+    supp = sum(len(r.suppressed) for r in reports)
+    lines.append(
+        f"audited {len(reports)} site groups x {len(RULES)} rules in "
+        f"{elapsed:.1f}s: {total} finding(s), {supp} suppressed")
+    return "\n".join(lines)
+
+
+def render_markdown(reports, elapsed: float) -> str:
+    total = sum(len(r.findings) for r in reports)
+    lines = [
+        "### Static audit (`python -m repro.analysis`)", "",
+        f"{len(reports)} site groups x {len(RULES)} rules in "
+        f"{elapsed:.1f}s — "
+        + ("**all clean**" if total == 0 else f"**{total} finding(s)**"),
+        "", "| site group | status | collectives (gather/route/psum) |",
+        "|---|---|---|",
+    ]
+    for rep in reports:
+        status = "✅ clean" if rep.ok else f"❌ {len(rep.findings)}"
+        if rep.suppressed:
+            status += f" ({len(rep.suppressed)} suppressed)"
+        s = rep.stats
+        coll = (f"{s['all_gather']}/{s['all_to_all']}/{s['psum']}"
+                if "all_gather" in s else "—")
+        lines.append(f"| {rep.name} | {status} | {coll} |")
+    for rep in reports:
+        for f in rep.findings:
+            lines.append(f"- `{f.rule}` @ `{f.site}`: {f.detail}")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--arch", action="append", choices=ARCH_IDS,
+                    help="audit only this arch (repeatable; default all)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on any unsuppressed finding")
+    ap.add_argument("--suppress", action="append", default=[],
+                    metavar="RULE[@site]",
+                    help="drop findings for RULE (optionally one site)")
+    ap.add_argument("--workers", type=int, default=AUDIT_M,
+                    help="PS shards / workers in the audited mesh")
+    ap.add_argument("--markdown", action="store_true",
+                    help="GitHub step-summary markdown instead of text")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    reports = run_audit(args.arch, m=args.workers,
+                        suppressions=args.suppress)
+    elapsed = time.perf_counter() - t0
+    render = render_markdown if args.markdown else render_text
+    print(render(reports, elapsed))
+    total = sum(len(r.findings) for r in reports)
+    return min(total, 125) if args.check else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,225 @@
+"""The audit matrix: every registered arch x every hot-path rule.
+
+For each arch (reduced variant — same code paths, tractable trace sizes)
+the auditor traces, never executes:
+
+a. the layer-grouped **fused psum step** (``make_gba_fused_psum_step``)
+   under a 4-worker :class:`jax.sharding.AbstractMesh` with the real LM
+   loss -> GBA-COLL-001/002 (collective census vs ``group_table``) and
+   GBA-DTYPE-002;
+b. the same step with a **probe loss** whose sanctioned widening-convert
+   count is exactly derivable (one forward ``astype(f32)`` + one
+   ``ravel_group`` grad cast per non-f32 leaf) -> GBA-DTYPE-001.  The
+   real LM loss has legitimate mixed-precision upcasts, so the upcast
+   budget is only checkable on the probe;
+c. the **sync psum step** (``make_gba_psum_step``) -> GBA-COLL-004;
+d. the single-host **fused train step** lowered with the canonical
+   ``donate_argnums=0`` -> GBA-DON-001, and traced twice with fresh
+   same-shaped args -> GBA-RETRACE-001;
+e. the **decode step** -> GBA-COLL-003, GBA-DTYPE-002, GBA-RETRACE-001;
+f. the arch's ``gba_apply`` launch meta at its real sharded flat layout
+   -> GBA-TILE-001 / GBA-VMEM-001/002 / GBA-GRID-001.
+
+:func:`audit_kernels` covers the arch-independent kernels (streamed
+embedding fwd/bwd, fused Adagrad, aggregate, flash decode) at their
+bench shapes with the same Pallas rules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import jaxpr_audit as JA
+from repro.analysis import pallas_check as PC
+from repro.analysis import retrace_guard as RG
+from repro.analysis.rules import Finding
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import GBAConfig, InputShape
+from repro.core.flat_sharded import ShardedFlatLayout
+from repro.core.gba_shard_map import (make_gba_fused_psum_step,
+                                      make_gba_psum_step)
+from repro.launch.steps import (_loss_from_batch, _memory_len,
+                                abstract_cache, abstract_params,
+                                init_fused_train_state,
+                                make_decode_step, make_fused_train_step,
+                                model_inputs)
+from repro.models import transformer as T
+from repro.optim import get_optimizer
+
+SDS = jax.ShapeDtypeStruct
+
+AUDIT_M = 4            # workers / PS shards in the audited abstract mesh
+AUDIT_SEQ = 16         # trace-only seq len (shapes don't change collectives)
+AUDIT_IOTA = 4
+AUDIT_LR = 1e-3
+
+
+def abstract_mesh(m: int = AUDIT_M, axis: str = "data"):
+    """Devices-free mesh: lets make_jaxpr trace shard_map'd steps at any
+    worker count on a 1-CPU container."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh(((axis, m),))
+
+
+def probe_loss(params, batch):
+    """Loss with an exactly countable upcast budget: per non-f32 leaf,
+    one widening ``astype`` here (forward) + one in ``ravel_group``
+    (gradient) and nothing else."""
+    sq = sum(jnp.sum(l.astype(jnp.float32) ** 2)
+             for l in jax.tree.leaves(params))
+    return jnp.mean(batch["x"]) * sq
+
+
+def widening_budget(layout: ShardedFlatLayout) -> int:
+    """Sanctioned widening-convert count of a probe-loss fused-step trace."""
+    return 2 * sum(1 for dt in layout.dtypes
+                   if jnp.dtype(dt) != jnp.float32)
+
+
+def arch_layout(cfg, m: int = AUDIT_M) -> ShardedFlatLayout:
+    """The arch's real layer-grouped flat layout at ``m`` PS shards,
+    built from abstract params (no allocation)."""
+    return ShardedFlatLayout.from_params(
+        abstract_params(cfg), m, group_by=T.param_group_key)
+
+
+def trace_fused_step(layout: ShardedFlatLayout, m: int, loss_fn,
+                     batch, *, axis: str = "data"):
+    """Closed jaxpr of the layer-grouped fused psum step — the artifact
+    every GBA-COLL/DTYPE rule (and the bench census columns) reads."""
+    step = make_gba_fused_psum_step(
+        abstract_mesh(m, axis), loss_fn, layout, iota=AUDIT_IOTA,
+        lr=AUDIT_LR, axis=axis)
+    flat = SDS((layout.padded_total,), jnp.float32)
+    return jax.make_jaxpr(step)(
+        flat, flat, batch, SDS((m,), jnp.int32), SDS((), jnp.int32))
+
+
+@dataclass
+class AuditReport:
+    """One audited site group (an arch, or the global kernel set)."""
+
+    name: str
+    findings: list[Finding] = field(default_factory=list)
+    suppressed: list[Finding] = field(default_factory=list)
+    stats: dict = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def audit_arch(arch: str, *, m: int = AUDIT_M,
+               reduced: bool = True) -> AuditReport:
+    """Run the full rule matrix over one registered arch."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    rep = AuditReport(arch)
+    pshapes = abstract_params(cfg)
+    layout = arch_layout(cfg, m)
+    def lm_loss(params, batch):
+        return _loss_from_batch(params, cfg, batch)
+
+    # a. fused psum step, real LM loss: collective schedule + f64 ban
+    site = f"{arch}/fused_psum"
+    batch = model_inputs(cfg, InputShape("audit", AUDIT_SEQ, m, "train"))
+    jx = trace_fused_step(layout, m, lm_loss, batch)
+    rep.findings += JA.check_fused_psum_schedule(jx, layout, m, site)
+    rep.findings += JA.check_no_f64(jx, site)
+    counts = JA.census_counts(JA.collective_census(jx))
+    rep.stats.update(
+        all_gather=counts.get("all_gather", 0),
+        all_to_all=counts.get("all_to_all", 0),
+        psum=counts.get("psum", 0),
+        num_groups=layout.num_groups,
+        shard_size=layout.shard_size,
+        peak_gather_bytes=layout.peak_gather_bytes)
+
+    # b. probe-loss trace: exact widening-convert budget
+    probe_batch = {"x": SDS((m * 8,), jnp.float32)}
+    jp = trace_fused_step(layout, m, probe_loss, probe_batch)
+    rep.findings += JA.check_widening_budget(
+        jp, widening_budget(layout), f"{arch}/fused_psum/probe")
+
+    # c. sync psum step: per-leaf grads + scalar loss, nothing else
+    opt = get_optimizer("adagrad", AUDIT_LR)
+    sync = make_gba_psum_step(abstract_mesh(m), probe_loss, opt, AUDIT_IOTA)
+    jsync = jax.make_jaxpr(sync)(
+        pshapes, jax.eval_shape(opt.init, pshapes), probe_batch,
+        SDS((m,), jnp.int32), SDS((), jnp.int32))
+    rep.findings += JA.check_sync_psum_schedule(
+        jsync, [l.shape for l in jax.tree.leaves(pshapes)],
+        f"{arch}/sync_psum")
+
+    # d. fused train step: donation + retrace stability
+    site = f"{arch}/fused_train_step"
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshapes)
+    gba = GBAConfig(local_batch=2, buffer_size=m,
+                    staleness_tolerance=AUDIT_IOTA)
+    flat_layout, state = init_fused_train_state(params, gba)
+    step = make_fused_train_step(cfg, gba, flat_layout)
+    tbatch = model_inputs(cfg, InputShape("audit", AUDIT_SEQ, 2, "train"))
+    tok = SDS((), jnp.int32)
+    lowered = jax.jit(step, donate_argnums=0).lower(state, tbatch, tok)
+    # args_info is ((args...), kwargs); the state is positional arg 0
+    rep.findings += JA.check_donation(lowered.args_info[0][0], site)
+    state_sds = jax.tree.map(lambda x: SDS(x.shape, x.dtype), state)
+    rep.findings += RG.check_retrace(
+        step, lambda: ((state_sds, tbatch, tok), {}), site)
+
+    # e. decode step: no collectives, no f64, no retrace
+    site = f"{arch}/decode"
+    dec = make_decode_step(cfg)
+    cache = abstract_cache(cfg, 2, 64, _memory_len(cfg))
+    dtok = model_inputs(
+        cfg, InputShape("audit", 64, 2, "decode"))["tokens"]
+    jdec = jax.make_jaxpr(dec)(pshapes, dtok, cache)
+    rep.findings += JA.check_no_collectives(jdec, site)
+    rep.findings += JA.check_no_f64(jdec, site)
+    rep.findings += RG.check_retrace(
+        dec, lambda: ((pshapes, dtok, cache), {}), site)
+
+    # f. the arch's own gba_apply launch at its real shard geometry
+    from repro.kernels import gba_apply
+    meta = gba_apply.launch_meta(layout.shard_size, m)
+    rep.findings += PC.check_launch(meta, f"{arch}/kernels/gba_apply")
+    rep.stats["apply_vmem_bytes"] = meta.vmem_bytes(meta.vmem_counted)
+    return rep
+
+
+def kernel_metas():
+    """Arch-independent kernel launches at their bench shapes."""
+    from repro.kernels import (embedding_bag, flash_decode, fused_adagrad,
+                               gba_aggregate)
+    return (
+        fused_adagrad.launch_meta(1 << 16),
+        gba_aggregate.launch_meta(1 << 16, 8),
+        embedding_bag.fwd_launch_meta(32, 26, 100_000, 128),
+        embedding_bag.bwd_launch_meta(32, 26, 100_000, 128),
+        flash_decode.launch_meta(4, 32_768, 8, 4, 128),
+    )
+
+
+def audit_kernels() -> AuditReport:
+    rep = AuditReport("kernels")
+    for meta in kernel_metas():
+        rep.findings += PC.check_launch(meta, f"kernels/{meta.kernel}")
+        rep.stats[f"{meta.kernel}_vmem_bytes"] = meta.total_vmem_bytes()
+    return rep
+
+
+def run_audit(archs=None, *, m: int = AUDIT_M,
+              suppressions=()) -> list[AuditReport]:
+    """Audit every requested arch plus the global kernel set, applying
+    ``RULE`` / ``RULE@site`` suppressions."""
+    from repro.analysis.rules import apply_suppressions, parse_suppressions
+    sup = parse_suppressions(suppressions)
+    reports = [audit_arch(a, m=m) for a in (archs or ARCH_IDS)]
+    reports.append(audit_kernels())
+    for rep in reports:
+        rep.findings, dropped = apply_suppressions(rep.findings, sup)
+        rep.suppressed += dropped
+    return reports

@@ -1,0 +1,122 @@
+"""Pallas rule family: tile alignment, VMEM budgets, index-map bounds.
+
+Operates purely on the static :class:`repro.kernels.launch_meta.LaunchMeta`
+each kernel exports (and, for the 1-D kernels, builds its real specs
+from) — nothing is compiled or executed, so these checks run in the CPU
+container even though Mosaic tile legality is a real-TPU property.
+
+Calibration notes (what the rules deliberately allow):
+
+* an axis whose block covers the whole (padded) array axis is exempt
+  from tile alignment — Mosaic pads untiled axes internally (e.g. the
+  narrow-table ``BLOCK_D=16`` embedding tiles, ``flash_decode``'s
+  (KV, G) trailing dims).  Only genuinely TILED axes must align.
+* only the last two block dims carry tiling constraints (lane = 128,
+  sublane = per-dtype min from the TPU packing table); higher dims are
+  unconstrained.
+* scratch buffers are counted for VMEM residency but not tile-checked
+  (they are kernel-internal layout, legal for Mosaic to pad).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+
+from repro.analysis.rules import Finding, finding
+from repro.kernels.launch_meta import VMEM as VMEM_SPACE, LaunchMeta
+
+# per-dtype min sublane count by itemsize (f32 -> (8, 128),
+# bf16 -> (16, 128), int8/fp8 -> (32, 128)); lane dim is always 128
+MIN_SUBLANE = {8: 8, 4: 8, 2: 16, 1: 32}
+LANE = 128
+VMEM_BUDGET_BYTES = 16 * 2 ** 20       # per-core VMEM (v4/v5 ~16MiB)
+
+
+def check_tiles(meta: LaunchMeta, site: str) -> list[Finding]:
+    """GBA-TILE-001 over every VMEM in/out block."""
+    findings = []
+    for bm in meta.inputs + meta.outputs:
+        if bm.memory_space != VMEM_SPACE or bm.block is None:
+            continue
+        block, array = bm.block, bm.array_shape
+        # lane (last) dim
+        if block[-1] != array[-1] and block[-1] % LANE:
+            findings.append(finding(
+                "GBA-TILE-001", site,
+                f"{meta.kernel}/{bm.name}: tiled lane dim {block[-1]} "
+                f"not a multiple of {LANE} (block {block}, "
+                f"array {array})"))
+        # sublane (second-to-last) dim
+        if len(block) >= 2:
+            sub_min = MIN_SUBLANE[bm.itemsize]
+            if block[-2] != array[-2] and block[-2] % sub_min:
+                findings.append(finding(
+                    "GBA-TILE-001", site,
+                    f"{meta.kernel}/{bm.name}: tiled sublane dim "
+                    f"{block[-2]} not a multiple of {sub_min} "
+                    f"({bm.dtype} min tile; block {block}, "
+                    f"array {array})"))
+    return findings
+
+
+def check_vmem(meta: LaunchMeta, site: str,
+               budget: int = VMEM_BUDGET_BYTES) -> list[Finding]:
+    """GBA-VMEM-001 (declared formula == recomputed residency over the
+    counted blocks) + GBA-VMEM-002 (total residency under budget)."""
+    findings = []
+    if meta.declared_vmem_bytes is not None:
+        recomputed = meta.vmem_bytes(meta.vmem_counted)
+        if recomputed != meta.declared_vmem_bytes:
+            findings.append(finding(
+                "GBA-VMEM-001", site,
+                f"{meta.kernel}: declared VMEM cap "
+                f"{meta.declared_vmem_bytes}B != {recomputed}B recomputed "
+                f"from blocks {list(meta.vmem_counted)} — the formula "
+                f"drifted from the launch"))
+    total = meta.total_vmem_bytes()
+    if total > budget:
+        findings.append(finding(
+            "GBA-VMEM-002", site,
+            f"{meta.kernel}: total VMEM residency {total}B "
+            f"({ {k: v for k, v in meta.named_bytes().items() if v} }) "
+            f"exceeds the {budget}B per-core budget"))
+    return findings
+
+
+def _grid_points(grid: tuple[int, ...], cap: int):
+    if math.prod(grid) <= cap:
+        return itertools.product(*(range(n) for n in grid))
+    # huge grids: corners (and near-corners) catch off-by-one maps
+    return itertools.product(*(sorted({0, 1, n - 1}) for n in grid))
+
+
+def check_grid_bounds(meta: LaunchMeta, site: str,
+                      max_points: int = 4096) -> list[Finding]:
+    """GBA-GRID-001: every index map lands every block inside the padded
+    array over the whole grid (corner sampling past ``max_points``)."""
+    findings = []
+    for bm in meta.inputs + meta.outputs:
+        if bm.index_map is None or bm.block is None:
+            continue
+        for pt in _grid_points(meta.grid, max_points):
+            idx = tuple(bm.index_map(*pt))
+            bad = (len(idx) != len(bm.block)
+                   or any(i < 0 for i in idx)
+                   or any((i + 1) * blk > dim for i, blk, dim
+                          in zip(idx, bm.block, bm.array_shape)))
+            if bad:
+                findings.append(finding(
+                    "GBA-GRID-001", site,
+                    f"{meta.kernel}/{bm.name}: index map at grid {pt} "
+                    f"-> block index {idx} puts block {bm.block} outside "
+                    f"array {bm.array_shape}"))
+                break                      # one point per operand is enough
+    return findings
+
+
+def check_launch(meta: LaunchMeta, site: str,
+                 budget: int = VMEM_BUDGET_BYTES) -> list[Finding]:
+    """All Pallas rules over one launch."""
+    return (check_tiles(meta, site)
+            + check_vmem(meta, site, budget)
+            + check_grid_bounds(meta, site))

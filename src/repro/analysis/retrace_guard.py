@@ -1,0 +1,45 @@
+"""Retrace rule family: GBA-RETRACE-001.
+
+``jax.jit(f).trace(args)`` populates the same aval-keyed cache the real
+call path uses, without compiling or executing anything.  Tracing twice
+with *fresh but same-shaped* arguments must hit the cache the second
+time; if the traced function leaks a python scalar, a weak-typed
+constant, or a non-hashable static into its signature, the second trace
+re-enters it and this guard sees the function body run again.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.rules import Finding, finding
+
+
+def count_traces(fn, args_factory, n_calls: int = 2,
+                 **jit_kwargs) -> int:
+    """Trace ``jax.jit(fn)`` ``n_calls`` times with fresh args from
+    ``args_factory()`` and return how many times the function body
+    actually ran (1 == cached, stable)."""
+    traces = 0
+
+    def counted(*args, **kwargs):
+        nonlocal traces
+        traces += 1
+        return fn(*args, **kwargs)
+
+    jitted = jax.jit(counted, **jit_kwargs)
+    for _ in range(n_calls):
+        args, kwargs = args_factory()
+        jitted.trace(*args, **kwargs)
+    return traces
+
+
+def check_retrace(fn, args_factory, site: str, **jit_kwargs) -> list[Finding]:
+    """GBA-RETRACE-001: a second same-shaped call must not retrace."""
+    traces = count_traces(fn, args_factory, n_calls=2, **jit_kwargs)
+    if traces > 1:
+        return [finding(
+            "GBA-RETRACE-001", site,
+            f"traced {traces}x for identical avals — the step leaks a "
+            f"python scalar / weak type / unhashable static into its "
+            f"jit signature")]
+    return []

@@ -1,0 +1,100 @@
+"""Rule registry for the hot-path static auditor.
+
+Every check the auditor runs carries a stable rule ID (``GBA-<FAM>-<NNN>``)
+so CI failures, suppressions, and the bench columns all reference the same
+name.  A violation is a :class:`Finding`; suppression is by rule ID —
+globally (``"GBA-TILE-001"``) or per call site
+(``"GBA-TILE-001@granite-8b/kernels/gba_apply"``).  See
+``src/repro/analysis/README.md`` for what each rule guarantees.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+RULES: dict[str, str] = {
+    "GBA-COLL-001": (
+        "layer-grouped fused-psum collective schedule matches "
+        "ShardedFlatLayout.group_table: one tiled all_gather per group "
+        "(exact per-group shapes, group order) + one (M,) token gather, "
+        "one all_to_all per group (exact (M, group_shard) shapes, group "
+        "order), gathers before routing"),
+    "GBA-COLL-002": (
+        "every psum on the audited path reduces scalars only — the "
+        "gradient buffer is routed, never summed"),
+    "GBA-COLL-003": (
+        "the serving decode path launches no collectives"),
+    "GBA-COLL-004": (
+        "the sync psum step reduces exactly the per-leaf decayed "
+        "gradients plus one scalar loss — no gathers, no all_to_all"),
+    "GBA-DTYPE-001": (
+        "no silent f32 upcast on the gradient path: widening float "
+        "convert_element_type count equals the sanctioned per-leaf "
+        "ravel/loss casts of the probe trace"),
+    "GBA-DTYPE-002": (
+        "no float64 anywhere in a traced hot path (x64/weak-type leak)"),
+    "GBA-DON-001": (
+        "the flat (M, shard) buffer, Adagrad accumulators, and params "
+        "are donated into the jitted train step (no double allocation)"),
+    "GBA-RETRACE-001": (
+        "a second call with same-shaped inputs does not retrace "
+        "(weak-type / python-scalar leak)"),
+    "GBA-TILE-001": (
+        "every tiled VMEM block axis is aligned to the per-dtype TPU "
+        "min tile (lane 128; sublane 8/16/32 for 4/2/1-byte dtypes)"),
+    "GBA-VMEM-001": (
+        "the kernel's declared VMEM cap (apply_vmem_bytes-style formula) "
+        "equals the residency recomputed from its launch meta"),
+    "GBA-VMEM-002": (
+        "total per-step VMEM residency (blocks + scratch) fits the "
+        "16MiB per-core budget"),
+    "GBA-GRID-001": (
+        "every BlockSpec index map stays in bounds over the whole grid"),
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one call site."""
+
+    rule: str
+    site: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"{self.rule} @ {self.site}: {self.detail}"
+
+
+def _validate(rule: str) -> None:
+    if rule not in RULES:
+        raise KeyError(f"unknown rule ID {rule!r}; known: {sorted(RULES)}")
+
+
+def finding(rule: str, site: str, detail: str) -> Finding:
+    _validate(rule)
+    return Finding(rule, site, detail)
+
+
+def parse_suppressions(items) -> tuple[tuple[str, str | None], ...]:
+    """``["GBA-X-001", "GBA-Y-002@site"]`` -> ((rule, site-or-None), ...).
+    Unknown rule IDs are rejected so a typo can't silently disable
+    nothing."""
+    out = []
+    for item in items:
+        rule, _, site = str(item).partition("@")
+        _validate(rule)
+        out.append((rule, site or None))
+    return tuple(out)
+
+
+def is_suppressed(f: Finding,
+                  suppressions: tuple[tuple[str, str | None], ...]) -> bool:
+    return any(rule == f.rule and (site is None or site == f.site)
+               for rule, site in suppressions)
+
+
+def apply_suppressions(findings, suppressions):
+    """-> (kept, suppressed) finding lists."""
+    kept, dropped = [], []
+    for f in findings:
+        (dropped if is_suppressed(f, suppressions) else kept).append(f)
+    return kept, dropped

@@ -52,6 +52,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import runtime
+from repro.kernels.launch_meta import (ANY, BlockMeta, LaunchMeta,
+                                       ScratchMeta, block_specs,
+                                       scratch_shapes)
 
 BLOCK_V = 512      # vocab rows per streamed table tile / backward out block
 CHUNK_E = 256      # sorted (id, row) entries consumed per pipeline step
@@ -83,6 +86,85 @@ def stream_vmem_bytes(d: int, *, table_itemsize: int = 4,
         "bwd": 2 * chunk_e * bd * row_itemsize + 2 * chunk_e * 4,
         "block_d": bd,
     }
+
+
+def _entry_pad(e: int, chunk_e: int) -> int:
+    """Padded sorted-entry length: ``chunk_e``-wide slices never run off
+    the end (mirrors ``_sorted_entries``)."""
+    return e + ((-e) % chunk_e) + chunk_e
+
+
+def fwd_launch_meta(b: int, f: int, v: int, d: int, table_dtype=jnp.float32,
+                    *, block_v: int = BLOCK_V, block_d: int = BLOCK_D,
+                    chunk_e: int = CHUNK_E) -> LaunchMeta:
+    """Static launch geometry of the streamed forward: the V- and E-sized
+    arrays are ANY (HBM) operands, VMEM holds only the double-buffered
+    tile/entry scratch plus the (B, BLOCK_D) output tile.  The kernel
+    builds its specs and VMEM scratch from this meta."""
+    bd = _block_d(d, block_d)
+    d_pad = _round_up(d, bd)
+    v_rows = max(v, block_v)
+    e_pad = _entry_pad(b * f, chunk_e)
+    bp = _round_up(b, 8)
+    vm = stream_vmem_bytes(d, table_itemsize=jnp.dtype(table_dtype).itemsize,
+                           block_v=block_v, block_d=block_d, chunk_e=chunk_e)
+    return LaunchMeta(
+        kernel="embedding_bag_fwd",
+        grid=(d_pad // bd,),
+        num_scalar_prefetch=4,
+        inputs=(
+            BlockMeta("entries", (2, e_pad), jnp.int32, memory_space=ANY),
+            BlockMeta("table", (v_rows, d_pad), table_dtype,
+                      memory_space=ANY),
+        ),
+        outputs=(
+            BlockMeta("out", (bp, d_pad), table_dtype, (bp, bd),
+                      lambda j, *_: (0, j)),
+        ),
+        scratch=(
+            ScratchMeta("tile_buf", (2, block_v, bd), table_dtype),
+            ScratchMeta("ent_buf", (2, 2, chunk_e), jnp.int32),
+        ),
+        declared_vmem_bytes=vm["fwd"],
+        vmem_counted=("tile_buf", "ent_buf"),
+    )
+
+
+def bwd_launch_meta(b: int, f: int, v: int, d: int, row_dtype=jnp.float32,
+                    *, block_v: int = BLOCK_V, block_d: int = BLOCK_D,
+                    chunk_e: int = CHUNK_E) -> LaunchMeta:
+    """Static launch geometry of the sorted-scatter backward: grid =
+    (vocab blocks x D blocks), each program owns one disjoint
+    (BLOCK_V, BLOCK_D) output tile and streams its sorted run through the
+    double-buffered chunk scratch."""
+    bd = _block_d(d, block_d)
+    d_pad = _round_up(d, bd)
+    cap_pad = _round_up(v, block_v)
+    e_pad = _entry_pad(b * f, chunk_e)
+    vm = stream_vmem_bytes(d, row_itemsize=jnp.dtype(row_dtype).itemsize,
+                           block_v=block_v, block_d=block_d, chunk_e=chunk_e)
+    return LaunchMeta(
+        kernel="embedding_bag_bwd",
+        grid=(cap_pad // block_v, d_pad // bd),
+        num_scalar_prefetch=1,
+        inputs=(
+            BlockMeta("sorted_ids", (e_pad,), jnp.int32, memory_space=ANY),
+            BlockMeta("sorted_rows", (e_pad, d_pad), row_dtype,
+                      memory_space=ANY),
+        ),
+        outputs=(
+            BlockMeta("gtable", (cap_pad, d_pad), jnp.float32,
+                      (block_v, bd), lambda i, j, *_: (i, j)),
+            BlockMeta("counts", (cap_pad,), jnp.float32, (block_v,),
+                      lambda i, j, *_: (i,)),
+        ),
+        scratch=(
+            ScratchMeta("ids_buf", (2, chunk_e), jnp.int32),
+            ScratchMeta("rows_buf", (2, chunk_e, bd), row_dtype),
+        ),
+        declared_vmem_bytes=vm["bwd"],
+        vmem_counted=("ids_buf", "rows_buf"),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -248,19 +330,16 @@ def _embedding_bag_streamed(ids: jax.Array, table: jax.Array, *,
     step_p0 = offsets[step_blk] + chunk_in_blk * chunk_e
 
     bp = _round_up(b, 8)
+    meta = fwd_launch_meta(b, f, v, d, table.dtype, block_v=block_v,
+                           block_d=block_d, chunk_e=chunk_e)
     out = pl.pallas_call(
         functools.partial(_fwd_kernel, block_v=block_v, chunk_e=chunk_e),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=4,
-            grid=(d_pad // bd,),
-            in_specs=[
-                pl.BlockSpec(memory_space=pltpu.ANY),     # entries
-                pl.BlockSpec(memory_space=pltpu.ANY),     # table
-            ],
-            out_specs=pl.BlockSpec((bp, bd), lambda j, *_: (0, j)),
-            scratch_shapes=[
-                pltpu.VMEM((2, block_v, bd), table.dtype),
-                pltpu.VMEM((2, 2, chunk_e), jnp.int32),
+            num_scalar_prefetch=meta.num_scalar_prefetch,
+            grid=meta.grid,
+            in_specs=block_specs(meta.inputs),
+            out_specs=block_specs(meta.outputs)[0],
+            scratch_shapes=scratch_shapes(meta.scratch) + [
                 pltpu.SemaphoreType.DMA((2,)),
                 pltpu.SemaphoreType.DMA((2,)),
             ],
@@ -387,22 +466,17 @@ def _embedding_bag_grad_streamed(ids: jax.Array, grad_out: jax.Array,
     sorted_ids, sorted_rows, offsets, cap_pad, nvb = _sorted_grad_rows(
         ids, grad_out, capacity, block_v, chunk_e, d_pad)
 
+    meta = bwd_launch_meta(ids.shape[0], ids.shape[1], capacity, d,
+                           grad_out.dtype, block_v=block_v,
+                           block_d=block_d, chunk_e=chunk_e)
     gtable, counts = pl.pallas_call(
         functools.partial(_bwd_kernel, block_v=block_v, chunk_e=chunk_e),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(nvb, d_pad // bd),
-            in_specs=[
-                pl.BlockSpec(memory_space=pltpu.ANY),     # sorted ids
-                pl.BlockSpec(memory_space=pltpu.ANY),     # sorted rows
-            ],
-            out_specs=[
-                pl.BlockSpec((block_v, bd), lambda i, j, *_: (i, j)),
-                pl.BlockSpec((block_v,), lambda i, j, *_: (i,)),
-            ],
-            scratch_shapes=[
-                pltpu.VMEM((2, chunk_e), jnp.int32),
-                pltpu.VMEM((2, chunk_e, bd), grad_out.dtype),
+            num_scalar_prefetch=meta.num_scalar_prefetch,
+            grid=meta.grid,
+            in_specs=block_specs(meta.inputs),
+            out_specs=block_specs(meta.outputs),
+            scratch_shapes=scratch_shapes(meta.scratch) + [
                 pltpu.SemaphoreType.DMA((2,)),
                 pltpu.SemaphoreType.DMA((2,)),
             ],

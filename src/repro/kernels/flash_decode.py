@@ -19,7 +19,52 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.launch_meta import (BlockMeta, LaunchMeta, ScratchMeta,
+                                       block_specs, scratch_shapes)
+
 BLOCK_L = 512
+
+
+def decode_vmem_bytes(kv: int, g: int, hd: int, l: int,
+                      itemsize: int = 4) -> int:
+    """Per-grid-step VMEM residency: q + output blocks, two (blk, KV, hd)
+    cache blocks, and the f32 online-softmax accumulators."""
+    blk = min(BLOCK_L, l)
+    return ((2 * kv * g * hd + 2 * blk * kv * hd) * itemsize
+            + (2 * kv * g + kv * g * hd) * 4)
+
+
+def launch_meta(b: int, l: int, kv: int, g: int, hd: int,
+                dtype=jnp.float32) -> LaunchMeta:
+    """Static launch geometry for a (B, KV, G, hd) x (B, L, KV, hd)
+    decode; the pallas_call builds its specs and scratch from this."""
+    blk = min(BLOCK_L, l)
+    return LaunchMeta(
+        kernel="flash_decode",
+        grid=(b, l // blk),
+        num_scalar_prefetch=1,
+        inputs=(
+            BlockMeta("q", (b, kv, g, hd), dtype, (1, kv, g, hd),
+                      lambda bi, j, *_: (bi, 0, 0, 0)),
+            BlockMeta("k", (b, l, kv, hd), dtype, (1, blk, kv, hd),
+                      lambda bi, j, *_: (bi, j, 0, 0)),
+            BlockMeta("v", (b, l, kv, hd), dtype, (1, blk, kv, hd),
+                      lambda bi, j, *_: (bi, j, 0, 0)),
+        ),
+        outputs=(
+            BlockMeta("o", (b, kv, g, hd), dtype, (1, kv, g, hd),
+                      lambda bi, j, *_: (bi, 0, 0, 0)),
+        ),
+        scratch=(
+            ScratchMeta("m_scratch", (kv, g), jnp.float32),
+            ScratchMeta("l_scratch", (kv, g), jnp.float32),
+            ScratchMeta("acc_scratch", (kv, g, hd), jnp.float32),
+        ),
+        declared_vmem_bytes=decode_vmem_bytes(
+            kv, g, hd, l, jnp.dtype(dtype).itemsize),
+        vmem_counted=("q", "k", "v", "o", "m_scratch", "l_scratch",
+                      "acc_scratch"),
+    )
 
 
 def _compiler_params():
@@ -77,24 +122,15 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
     L = k.shape[1]
     blk = min(BLOCK_L, L)
     assert L % blk == 0
-    grid = (B, L // blk)
+    meta = launch_meta(B, L, KV, G, hd, q.dtype)
     out = pl.pallas_call(
         functools.partial(_kernel, blk=blk),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, KV, G, hd), lambda b, j, *_: (b, 0, 0, 0)),
-                pl.BlockSpec((1, blk, KV, hd), lambda b, j, *_: (b, j, 0, 0)),
-                pl.BlockSpec((1, blk, KV, hd), lambda b, j, *_: (b, j, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, KV, G, hd),
-                                   lambda b, j, *_: (b, 0, 0, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((KV, G), jnp.float32),       # running max
-                pltpu.VMEM((KV, G), jnp.float32),       # running sum
-                pltpu.VMEM((KV, G, hd), jnp.float32),   # output accumulator
-            ],
+            num_scalar_prefetch=meta.num_scalar_prefetch,
+            grid=meta.grid,
+            in_specs=block_specs(meta.inputs),
+            out_specs=block_specs(meta.outputs)[0],
+            scratch_shapes=scratch_shapes(meta.scratch),
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         compiler_params=_compiler_params(),

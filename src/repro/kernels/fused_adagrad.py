@@ -17,7 +17,48 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.launch_meta import (BlockMeta, LaunchMeta, block_specs,
+                                       _round_up_static)
+
 BLOCK = 4096
+
+
+def adagrad_vmem_bytes(block: int = BLOCK) -> int:
+    """Per-grid-step VMEM residency: lr + param/grad/accum in blocks +
+    param/accum out blocks, all f32."""
+    return 4 + 5 * block * 4
+
+
+def launch_meta(n: int, param_dtype=jnp.float32,
+                grad_dtype=jnp.float32) -> LaunchMeta:
+    """Static launch geometry for an (n,)-param fused Adagrad update; the
+    pallas_call builds its specs from this.  param -> new_param and
+    accum -> new_accum are aliased in-place (the docstring's claim, now
+    declared to XLA and audited by GBA-DON rules)."""
+    np_ = _round_up_static(n, BLOCK)
+    return LaunchMeta(
+        kernel="fused_adagrad",
+        grid=(np_ // BLOCK,),
+        inputs=(
+            BlockMeta("lr", (1,), jnp.float32, (1,), lambda i: (0,)),
+            BlockMeta("param", (np_,), param_dtype, (BLOCK,),
+                      lambda i: (i,)),
+            BlockMeta("grad", (np_,), grad_dtype, (BLOCK,),
+                      lambda i: (i,)),
+            BlockMeta("accum", (np_,), jnp.float32, (BLOCK,),
+                      lambda i: (i,)),
+        ),
+        outputs=(
+            BlockMeta("new_param", (np_,), param_dtype, (BLOCK,),
+                      lambda i: (i,)),
+            BlockMeta("new_accum", (np_,), jnp.float32, (BLOCK,),
+                      lambda i: (i,)),
+        ),
+        aliases=((1, 0), (3, 1)),
+        declared_vmem_bytes=adagrad_vmem_bytes(BLOCK),
+        vmem_counted=("lr", "param", "grad", "accum", "new_param",
+                      "new_accum"),
+    )
 
 
 def _kernel(lr_ref, param_ref, grad_ref, accum_ref, new_param_ref,
@@ -42,20 +83,13 @@ def fused_adagrad(param: jax.Array, grad: jax.Array, accum: jax.Array,
         grad = jnp.pad(grad, (0, pad))
         accum = jnp.pad(accum, (0, pad))
     np_ = n + pad
-    grid = (np_ // BLOCK,)
+    meta = launch_meta(n, param.dtype, grad.dtype)
     new_param, new_accum = pl.pallas_call(
         functools.partial(_kernel, eps=eps),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1,), lambda i: (0,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-        ],
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=block_specs(meta.outputs),
+        input_output_aliases=meta.pallas_aliases(),
         out_shape=[
             jax.ShapeDtypeStruct((np_,), param.dtype),
             jax.ShapeDtypeStruct((np_,), jnp.float32),

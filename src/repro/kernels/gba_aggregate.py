@@ -25,7 +25,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.launch_meta import (BlockMeta, LaunchMeta, block_specs,
+                                       _round_up_static)
+
 BLOCK_D = 2048
+
+
+def aggregate_vmem_bytes(m: int, block_d: int = BLOCK_D,
+                         itemsize: int = 4) -> int:
+    """Per-grid-step VMEM residency: the (m, BLOCK_D) buffer block plus
+    the (BLOCK_D,) output block, in the buffer dtype."""
+    return (m + 1) * block_d * itemsize
+
+
+def launch_meta(d: int, m: int, dtype=jnp.float32) -> LaunchMeta:
+    """Static launch geometry for an (m, d)-buffer aggregate; the
+    pallas_call builds its specs from this."""
+    d_pad = _round_up_static(d, BLOCK_D)
+    itemsize = jnp.dtype(dtype).itemsize
+    return LaunchMeta(
+        kernel="gba_aggregate",
+        grid=(d_pad // BLOCK_D,),
+        num_scalar_prefetch=3,
+        inputs=(
+            BlockMeta("grads", (m, d_pad), dtype, (m, BLOCK_D),
+                      lambda i, *_: (0, i)),
+        ),
+        outputs=(
+            BlockMeta("out", (d_pad,), dtype, (BLOCK_D,),
+                      lambda i, *_: (i,)),
+        ),
+        declared_vmem_bytes=aggregate_vmem_bytes(m, BLOCK_D, itemsize),
+        vmem_counted=("grads", "out"),
+    )
 
 
 def _kernel(tokens_ref, step_ref, iota_ref, grads_ref, out_ref):
@@ -50,15 +82,15 @@ def gba_aggregate(grads: jax.Array, tokens: jax.Array, step: jax.Array,
     if pad:
         grads = jnp.pad(grads, ((0, 0), (0, pad)))
     d_pad = d + pad
-    grid = (d_pad // BLOCK_D,)
+    meta = launch_meta(d, m, grads.dtype)
 
     out = pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=grid,
-            in_specs=[pl.BlockSpec((m, BLOCK_D), lambda i, *_: (0, i))],
-            out_specs=pl.BlockSpec((BLOCK_D,), lambda i, *_: (i,)),
+            num_scalar_prefetch=meta.num_scalar_prefetch,
+            grid=meta.grid,
+            in_specs=block_specs(meta.inputs),
+            out_specs=block_specs(meta.outputs)[0],
         ),
         out_shape=jax.ShapeDtypeStruct((d_pad,), grads.dtype),
         interpret=interpret,

@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.launch_meta import (BlockMeta, LaunchMeta, block_specs,
+                                       _round_up_static)
+
 BLOCK_N = 2048
 
 
@@ -37,6 +40,41 @@ def apply_vmem_bytes(m: int, block_n: int = BLOCK_N,
     of its slice length (benchmarks/bench_kernels gba_apply_sharded
     rows)."""
     return m * block_n * buf_itemsize + 4 * block_n * 4
+
+
+def launch_meta(n: int, m: int, param_dtype=jnp.float32,
+                buf_dtype=jnp.float32) -> LaunchMeta:
+    """Static launch geometry for an (n,)-param, (m, n)-buffer apply.
+    The real ``pallas_call`` below builds its specs FROM this, so the
+    auditor (repro.analysis.pallas_check) checks the launch that runs.
+
+    The in-place aliases donate param -> new_param and accum -> new_accum
+    at the kernel level (array-input indices; ``pallas_aliases()`` shifts
+    them past the 4 scalar-prefetch operands)."""
+    n_pad = _round_up_static(n, BLOCK_N)
+    buf_itemsize = jnp.dtype(buf_dtype).itemsize
+    return LaunchMeta(
+        kernel="gba_apply",
+        grid=(n_pad // BLOCK_N,),
+        num_scalar_prefetch=4,
+        inputs=(
+            BlockMeta("param", (n_pad,), param_dtype, (BLOCK_N,),
+                      lambda i, *_: (i,)),
+            BlockMeta("accum", (n_pad,), jnp.float32, (BLOCK_N,),
+                      lambda i, *_: (i,)),
+            BlockMeta("buffer", (m, n_pad), buf_dtype, (m, BLOCK_N),
+                      lambda i, *_: (0, i)),
+        ),
+        outputs=(
+            BlockMeta("new_param", (n_pad,), param_dtype, (BLOCK_N,),
+                      lambda i, *_: (i,)),
+            BlockMeta("new_accum", (n_pad,), jnp.float32, (BLOCK_N,),
+                      lambda i, *_: (i,)),
+        ),
+        aliases=((0, 0), (1, 1)),
+        declared_vmem_bytes=apply_vmem_bytes(m, BLOCK_N, buf_itemsize),
+        vmem_counted=("param", "accum", "buffer", "new_param", "new_accum"),
+    )
 
 
 def _kernel(tokens_ref, step_ref, iota_ref, lr_ref, param_ref, accum_ref,
@@ -72,27 +110,21 @@ def gba_apply(param: jax.Array, accum: jax.Array, buffer: jax.Array,
         accum = jnp.pad(accum, (0, pad))
         buffer = jnp.pad(buffer, ((0, 0), (0, pad)))
     n_pad = n + pad
-    grid = (n_pad // BLOCK_N,)
+    meta = launch_meta(n, m, param.dtype, buffer.dtype)
 
     new_param, new_accum = pl.pallas_call(
         functools.partial(_kernel, eps=eps),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=4,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((BLOCK_N,), lambda i, *_: (i,)),
-                pl.BlockSpec((BLOCK_N,), lambda i, *_: (i,)),
-                pl.BlockSpec((m, BLOCK_N), lambda i, *_: (0, i)),
-            ],
-            out_specs=[
-                pl.BlockSpec((BLOCK_N,), lambda i, *_: (i,)),
-                pl.BlockSpec((BLOCK_N,), lambda i, *_: (i,)),
-            ],
+            num_scalar_prefetch=meta.num_scalar_prefetch,
+            grid=meta.grid,
+            in_specs=block_specs(meta.inputs),
+            out_specs=block_specs(meta.outputs),
         ),
         out_shape=[
             jax.ShapeDtypeStruct((n_pad,), param.dtype),
             jax.ShapeDtypeStruct((n_pad,), jnp.float32),
         ],
+        input_output_aliases=meta.pallas_aliases(),
         interpret=interpret,
     )(tokens.astype(jnp.int32),
       jnp.asarray(step, jnp.int32).reshape(1),

@@ -251,6 +251,21 @@ def make_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
     return train_step
 
 
+def jit_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
+                         lr: float = 1e-3, eps: float = 1e-10,
+                         mesh: Mesh | None = None, axis: str = "data"):
+    """The canonical jitted form of :func:`make_fused_train_step`: state is
+    DONATED (``donate_argnums=0``), so the flat (M, shard) buffer, the
+    Adagrad accumulator, and the params reuse their buffers every step
+    instead of double-allocating.  The static auditor's GBA-DON-001 rule
+    checks this property; launchers should jit through here rather than
+    wrapping ``make_fused_train_step`` ad hoc."""
+    return jax.jit(
+        make_fused_train_step(cfg, gba, layout, lr=lr, eps=eps,
+                              mesh=mesh, axis=axis),
+        donate_argnums=0)
+
+
 def opt_state_specs(optimizer: Optimizer, pspecs: Any) -> Any:
     if optimizer.name == "adam":
         return {"m": pspecs, "v": pspecs, "count": P()}
@@ -341,10 +356,14 @@ def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
         state_sds = jax.eval_shape(
             functools.partial(init_train_state, optimizer=opt,
                               acc_dtype=acc_dt), pshapes)
+        # donate the state like launch.train does — without this the
+        # dryrun-lowered step double-allocates params + opt + acc
+        # (auditor rule GBA-DON-001)
         fn = jax.jit(make_train_step(cfg, opt, gba),
                      in_shardings=(named(sspecs), named(bspecs),
                                    NamedSharding(mesh, P())),
-                     out_shardings=(named(sspecs), None))
+                     out_shardings=(named(sspecs), None),
+                     donate_argnums=0)
         return fn, (state_sds, binputs, SDS((), jnp.int32))
 
     if shape.kind == "prefill":

@@ -67,7 +67,7 @@ from repro.data import make_lm_stream
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.launch.steps import (ARCH_OPTIMIZER, fused_state_specs,
                                 init_fused_train_state, init_train_state,
-                                make_fused_train_step, make_train_step)
+                                jit_fused_train_step, make_train_step)
 from repro.models import transformer as T
 from repro.optim import get_optimizer
 
@@ -214,10 +214,8 @@ def main() -> None:
         if fused:
             layout, state = init_fused_train_state(
                 params, gba, mesh=mesh, layer_groups=layer_groups)
-            step_fn = jax.jit(
-                make_fused_train_step(cfg, gba, layout, lr=args.lr,
-                                      mesh=mesh),
-                donate_argnums=0)
+            step_fn = jit_fused_train_step(cfg, gba, layout, lr=args.lr,
+                                           mesh=mesh)
             from repro.core.flat_sharded import ShardedFlatLayout
             if isinstance(layout, ShardedFlatLayout):
                 from repro.distributed import sharding as S

@@ -1,0 +1,275 @@
+"""Static auditor: every rule trips on its seeded known-bad fixture
+(exactly that rule, nothing else) and every shipped hot path audits
+clean — so no rule is vacuous and no hot path regresses silently."""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.analysis import audit as AU
+from repro.analysis import jaxpr_audit as JA
+from repro.analysis import pallas_check as PC
+from repro.analysis import retrace_guard as RG
+from repro.analysis import rules as R
+from repro.core.flat_sharded import ShardedFlatLayout
+from repro.core.gba_shard_map import make_gba_psum_step
+from repro.kernels.launch_meta import BlockMeta, LaunchMeta, ScratchMeta
+from repro.optim import get_optimizer
+
+SDS = jax.ShapeDtypeStruct
+M = 2
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+def tiny_layout(dtype=jnp.float32, m: int = M):
+    params = {"emb": SDS((32,), dtype),
+              "layers": {"w": SDS((16, 8), dtype)}}
+    layout = ShardedFlatLayout.from_params(
+        params, m, tile=8, group_by=lambda path: path[0])
+    return params, layout
+
+
+def fused_trace(dtype=jnp.float32, m: int = M):
+    _, layout = tiny_layout(dtype, m)
+    batch = {"x": SDS((m * 4,), jnp.float32)}
+    return layout, AU.trace_fused_step(layout, m, AU.probe_loss, batch)
+
+
+# ---------------------------------------------------------------------------
+# rule registry + suppressions
+# ---------------------------------------------------------------------------
+
+def test_finding_requires_known_rule():
+    with pytest.raises(KeyError):
+        R.finding("GBA-NOPE-999", "s", "d")
+    with pytest.raises(KeyError):
+        R.parse_suppressions(["GBA-NOPE-999"])
+
+
+def test_suppressions_global_and_per_site():
+    f1 = R.finding("GBA-TILE-001", "a/k", "x")
+    f2 = R.finding("GBA-TILE-001", "b/k", "x")
+    f3 = R.finding("GBA-VMEM-002", "a/k", "x")
+    sup = R.parse_suppressions(["GBA-TILE-001@a/k"])
+    kept, dropped = R.apply_suppressions([f1, f2, f3], sup)
+    assert kept == [f2, f3] and dropped == [f1]
+    kept, dropped = R.apply_suppressions(
+        [f1, f2, f3], R.parse_suppressions(["GBA-TILE-001"]))
+    assert kept == [f3] and dropped == [f1, f2]
+
+
+# ---------------------------------------------------------------------------
+# collective census (GBA-COLL-*)
+# ---------------------------------------------------------------------------
+
+def test_fused_schedule_clean_and_census_shapes():
+    layout, jx = fused_trace()
+    assert JA.check_fused_psum_schedule(jx, layout, M, "t") == []
+    census = JA.collective_census(jx)
+    gathers = [c.in_shapes[0] for c in census if c.op == "all_gather"]
+    exp, routes, token = JA.expected_fused_collectives(layout, M)
+    assert gathers == exp + [token]
+    assert [c.in_shapes[0] for c in census
+            if c.op == "all_to_all"] == routes
+
+
+def test_coll_001_trips_on_mismatched_layout():
+    # audit the 2-group trace against a single-group layout: the declared
+    # schedule (one gather/route per group, exact shapes) no longer matches
+    _, jx = fused_trace()
+    params = {"emb": SDS((32,), jnp.float32),
+              "layers": {"w": SDS((16, 8), jnp.float32)}}
+    other = ShardedFlatLayout.from_params(params, M, tile=8)
+    fs = JA.check_fused_psum_schedule(jx, other, M, "t")
+    assert rules_of(fs) == ["GBA-COLL-001"]
+
+
+def test_coll_002_trips_on_vector_psum():
+    mesh = AU.abstract_mesh(M)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P("data"),),
+                       out_specs=P(), check_rep=False)
+    def bad(x):
+        return lax.psum(x, "data")
+
+    jx = jax.make_jaxpr(bad)(SDS((M * 4,), jnp.float32))
+    assert rules_of(JA.check_scalar_psum_only(jx, "t")) == ["GBA-COLL-002"]
+
+
+def test_coll_003_trips_on_any_collective():
+    _, jx = fused_trace()
+    assert rules_of(JA.check_no_collectives(jx, "t")) == ["GBA-COLL-003"]
+    clean = jax.make_jaxpr(lambda x: x * 2)(SDS((4,), jnp.float32))
+    assert JA.check_no_collectives(clean, "t") == []
+
+
+def sync_trace():
+    params, _ = tiny_layout()
+    opt = get_optimizer("adagrad", 1e-3)
+    step = make_gba_psum_step(AU.abstract_mesh(M), AU.probe_loss, opt, 4)
+    return params, jax.make_jaxpr(step)(
+        params, jax.eval_shape(opt.init, params),
+        {"x": SDS((M * 4,), jnp.float32)},
+        SDS((M,), jnp.int32), SDS((), jnp.int32))
+
+
+def test_coll_004_sync_clean_and_trips_on_wrong_leaves():
+    params, jx = sync_trace()
+    leaf_shapes = [l.shape for l in jax.tree.leaves(params)]
+    assert JA.check_sync_psum_schedule(jx, leaf_shapes, "t") == []
+    fs = JA.check_sync_psum_schedule(jx, [(7, 7)], "t")
+    assert rules_of(fs) == ["GBA-COLL-004"]
+    # the fused trace is NOT a valid sync schedule (it gathers + routes)
+    _, jfused = fused_trace()
+    assert "GBA-COLL-004" in rules_of(
+        JA.check_sync_psum_schedule(jfused, leaf_shapes, "t"))
+
+
+# ---------------------------------------------------------------------------
+# dtype lints (GBA-DTYPE-*)
+# ---------------------------------------------------------------------------
+
+def test_dtype_001_budget_exact_on_probe_trace():
+    layout, jx = fused_trace(jnp.bfloat16)
+    budget = AU.widening_budget(layout)
+    assert budget == 2 * len(layout.dtypes)     # every leaf is bf16
+    assert JA.check_widening_budget(jx, budget, "t") == []
+    # one sanctioned cast fewer -> the leaked upcast trips
+    fs = JA.check_widening_budget(jx, budget - 1, "t")
+    assert rules_of(fs) == ["GBA-DTYPE-001"]
+
+
+def test_dtype_001_ignores_f32_layouts():
+    layout, jx = fused_trace(jnp.float32)
+    assert AU.widening_budget(layout) == 0
+    assert JA.check_widening_budget(jx, 0, "t") == []
+
+
+def test_dtype_002_trips_under_x64():
+    with jax.experimental.enable_x64():
+        jx = jax.make_jaxpr(
+            lambda x: x.astype(jnp.float64) * 2.0)(SDS((8,), jnp.float32))
+    assert rules_of(JA.check_no_f64(jx, "t")) == ["GBA-DTYPE-002"]
+    clean = jax.make_jaxpr(lambda x: x * 2.0)(SDS((8,), jnp.float32))
+    assert JA.check_no_f64(clean, "t") == []
+
+
+# ---------------------------------------------------------------------------
+# donation + retrace (GBA-DON-001 / GBA-RETRACE-001)
+# ---------------------------------------------------------------------------
+
+def _toy_step(state, x):
+    return jax.tree.map(lambda s: s + jnp.sum(x), state), jnp.sum(x)
+
+
+def test_don_001_trips_without_donate_argnums():
+    state = {"p": jnp.zeros((8,)), "acc": jnp.zeros((8,))}
+    x = SDS((4,), jnp.float32)
+    bad = jax.jit(_toy_step).lower(state, x).args_info[0][0]
+    assert rules_of(JA.check_donation(bad, "t")) == ["GBA-DON-001"]
+    good = jax.jit(_toy_step, donate_argnums=0).lower(state, x)
+    assert JA.check_donation(good.args_info[0][0], "t") == []
+
+
+def test_retrace_001_trips_on_weak_type_alternation():
+    # a python scalar traces weak-typed; alternating it with a strong
+    # jnp scalar of the same shape/dtype is exactly the leak this guards
+    vals = itertools.cycle([jnp.float32(1.0), 1.0])
+    fs = RG.check_retrace(lambda x: x * 2, lambda: ((next(vals),), {}), "t")
+    assert rules_of(fs) == ["GBA-RETRACE-001"]
+    stable = RG.check_retrace(
+        lambda x: x * 2, lambda: ((jnp.float32(1.0),), {}), "t")
+    assert stable == []
+
+
+# ---------------------------------------------------------------------------
+# Pallas launch rules (GBA-TILE / GBA-VMEM / GBA-GRID)
+# ---------------------------------------------------------------------------
+
+def _fixture_meta(inputs, **kw):
+    return LaunchMeta(kernel="fixture", grid=kw.pop("grid", (4,)),
+                      inputs=inputs, outputs=(), **kw)
+
+
+def test_tile_001_trips_on_misaligned_block():
+    meta = _fixture_meta((
+        BlockMeta("x", (64, 1024), jnp.float32, (8, 96),
+                  lambda i: (0, i)),))
+    assert rules_of(PC.check_launch(meta, "t")) == ["GBA-TILE-001"]
+
+
+def test_tile_001_bf16_sublane():
+    meta = _fixture_meta((
+        BlockMeta("x", (64, 256), jnp.bfloat16, (8, 128),
+                  lambda i: (0, 0)),))
+    # 8 rows is a legal f32 sublane but NOT a legal bf16 one (min 16)
+    assert rules_of(PC.check_tiles(meta, "t")) == ["GBA-TILE-001"]
+    f32 = _fixture_meta((
+        BlockMeta("x", (64, 256), jnp.float32, (8, 128),
+                  lambda i: (0, 0)),))
+    assert PC.check_tiles(f32, "t") == []
+
+
+def test_tile_001_whole_axis_exempt():
+    # block covers the full (padded) axis -> Mosaic pads internally, legal
+    meta = _fixture_meta((
+        BlockMeta("x", (4, 100), jnp.float32, (4, 100),
+                  lambda i: (0, 0)),))
+    assert PC.check_tiles(meta, "t") == []
+
+
+def test_grid_001_trips_on_out_of_bounds_map():
+    meta = _fixture_meta(
+        (BlockMeta("x", (64, 1024), jnp.float32, (8, 128),
+                   lambda i: (i, 8)),), grid=(8,))
+    assert rules_of(PC.check_launch(meta, "t")) == ["GBA-GRID-001"]
+
+
+def test_vmem_001_trips_on_declared_drift():
+    meta = _fixture_meta(
+        (BlockMeta("x", (64, 128), jnp.float32, (8, 128),
+                   lambda i: (i, 0)),),
+        declared_vmem_bytes=123, vmem_counted=("x",), grid=(8,))
+    assert rules_of(PC.check_launch(meta, "t")) == ["GBA-VMEM-001"]
+
+
+def test_vmem_002_trips_on_oversized_residency():
+    meta = _fixture_meta((
+        BlockMeta("x", (2048, 4096), jnp.float32),))   # 32MiB resident
+    assert rules_of(PC.check_launch(meta, "t")) == ["GBA-VMEM-002"]
+
+
+def test_vmem_counts_scratch():
+    meta = _fixture_meta(
+        (), scratch=(ScratchMeta("s", (2048, 4096), jnp.float32),))
+    assert rules_of(PC.check_vmem(meta, "t")) == ["GBA-VMEM-002"]
+
+
+# ---------------------------------------------------------------------------
+# shipped hot paths audit clean
+# ---------------------------------------------------------------------------
+
+def test_shipped_kernels_audit_clean():
+    rep = AU.audit_kernels()
+    assert rep.ok, [str(f) for f in rep.findings]
+    for meta in AU.kernel_metas():
+        assert meta.total_vmem_bytes() <= PC.VMEM_BUDGET_BYTES
+
+
+def test_granite_full_matrix_clean():
+    rep = AU.audit_arch("granite-8b")
+    assert rep.ok, [str(f) for f in rep.findings]
+    # census columns the bench gates on exactly
+    assert rep.stats["all_gather"] == rep.stats["num_groups"] + 1
+    assert rep.stats["all_to_all"] == rep.stats["num_groups"]
+    assert rep.stats["psum"] == 1

@@ -194,18 +194,23 @@ for name, gb in (("grouped", lambda n: n[0]), ("full", None)):
         step = make_gba_fused_psum_step(mesh, loss_fn, lay, iota=iota,
                                         lr=lr)
         if name == "grouped":
-            # structural check: one all_to_all and one param all_gather
-            # PER GROUP (+1 gather for the tokens)
+            # structural check via the static auditor's census: one
+            # all_to_all and one param all_gather PER GROUP (+1 gather for
+            # the tokens), exact shapes in group_table order
+            from repro.analysis.jaxpr_audit import (
+                census_counts, check_fused_psum_schedule, collective_census)
             x0 = jax.random.normal(jax.random.PRNGKey(50), (32,))
-            jaxpr = str(jax.make_jaxpr(step)(
+            jaxpr = jax.make_jaxpr(step)(
                 lay.ravel(params),
                 jnp.full((lay.padded_total,), 0.1, jnp.float32),
-                {"x": x0}, jnp.zeros((4,), jnp.int32), jnp.int32(0)))
+                {"x": x0}, jnp.zeros((4,), jnp.int32), jnp.int32(0))
+            counts = census_counts(collective_census(jaxpr))
             out["n_groups"] = lay.num_groups
-            # count equation heads, not substrings ('all_gather_dimension'
-            # is a param line of the same op)
-            out["n_all_to_all"] = jaxpr.count("all_to_all[")
-            out["n_all_gather"] = jaxpr.count("all_gather[")
+            out["n_all_to_all"] = counts.get("all_to_all", 0)
+            out["n_all_gather"] = counts.get("all_gather", 0)
+            out["schedule_findings"] = [
+                str(f) for f in check_fused_psum_schedule(
+                    jaxpr, lay, 4, "test/grouped")]
             out["peak_gather_bytes"] = lay.peak_gather_bytes
             out["full_gather_bytes"] = lay.full_gather_bytes
         jstep = jax.jit(step)
@@ -259,9 +264,11 @@ def test_layer_grouped_step_collective_schedule(grouped_results):
     """The grouped step's program really is per-group: one all_to_all per
     layer group, one param all_gather per group plus the (M,) token
     gather — and its peak gathered bytes is strictly below the
-    full-vector gather's."""
+    full-vector gather's.  Checked through the static auditor's census
+    (GBA-COLL-001/002), not jaxpr string matching."""
     res = grouped_results
     assert res["n_groups"] == 3
     assert res["n_all_to_all"] == res["n_groups"]
     assert res["n_all_gather"] == res["n_groups"] + 1
+    assert res["schedule_findings"] == [], res["schedule_findings"]
     assert res["peak_gather_bytes"] < res["full_gather_bytes"]
