@@ -67,9 +67,16 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
     The ``audit_*`` columns come from the static auditor
     (``repro.analysis``): the fused step's collective census under an
     abstract mesh at this shard count, and the kernel VMEM recomputed
-    from the exported launch meta — gated EXACTLY by ``run --check``."""
+    from the exported launch meta — gated EXACTLY by ``run --check``.
+    The quantized-wire columns record the int8 ``CompressionPolicy``'s
+    per-worker routing cost: ``bytes_on_wire`` / ``compression_ratio``
+    (gated monotone like ``gather_ratio`` — may not grow) and
+    ``audit_wire_dtype`` (exact-gated; the policy dtype only when the
+    compressed trace passes GBA-COLL-005, else ``leak``)."""
     from repro.analysis.audit import probe_loss, trace_fused_step
-    from repro.analysis.jaxpr_audit import census_counts, collective_census
+    from repro.analysis.jaxpr_audit import (census_counts, check_wire_dtypes,
+                                            collective_census)
+    from repro.core.compression import CompressionPolicy
     from repro.core.flat_sharded import ShardedFlatLayout
     from repro.configs import get_config
     from repro.kernels.gba_apply import launch_meta
@@ -90,9 +97,20 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
         # exported launch meta — any drift means the collective schedule
         # or the launch geometry changed and the baseline must be
         # regenerated deliberately
+        probe_batch = {"x": jax.ShapeDtypeStruct((shards * 8,), jnp.float32)}
         census = census_counts(collective_census(trace_fused_step(
-            layout, shards, probe_loss,
-            {"x": jax.ShapeDtypeStruct((shards * 8,), jnp.float32)})))
+            layout, shards, probe_loss, probe_batch)))
+        # quantized-wire accounting + COLL-005 verdict on the compressed
+        # trace: audit_wire_dtype is the policy dtype only when the trace
+        # checks clean, so a f32 leak past warmup flips an exact-gated
+        # column ("leak") instead of passing silently
+        pol = CompressionPolicy(scheme="int8", warmup_steps=1)
+        wire_findings = check_wire_dtypes(
+            trace_fused_step(layout, shards, probe_loss, probe_batch,
+                             compress=pol),
+            layout, shards, pol,
+            f"bench/gba_apply_sharded/{shards}shard")
+        wire_dtype = pol.wire_dtype() if not wire_findings else "leak"
         meta = launch_meta(sn, m)
         audit_vmem = meta.vmem_bytes(meta.vmem_counted)
         key = jax.random.PRNGKey(shards)
@@ -124,6 +142,9 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
             f"full_gather_bytes={layout.full_gather_bytes};"
             f"gather_ratio="
             f"{layout.peak_gather_bytes / layout.full_gather_bytes:.3f};"
+            f"bytes_on_wire={pol.wire_bytes(layout)};"
+            f"compression_ratio={pol.compression_ratio(layout):.3f};"
+            f"audit_wire_dtype={wire_dtype};"
             f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f};"
             f"fusion=one_launch_per_ps_shard"))
     return rows

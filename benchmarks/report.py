@@ -7,7 +7,8 @@ CI (.github/workflows/ci.yml) pipes the output into
 ``$GITHUB_STEP_SUMMARY`` after ``scripts/ci.sh`` regenerates the fresh
 JSON, so every commit's run page shows the per-row trajectory — the
 structural columns the ``--check`` gate enforces (vmem / launch / buffer
-/ peak-gather) plus the ungated interpret-mode wall time — instead of the
+/ peak-gather / quantized-wire bytes, ratio and dtype verdict) plus the
+ungated interpret-mode wall time — instead of the
 numbers living only inside a downloadable artifact.  Pure-stdlib on
 purpose: the report step must not need the repro package or jax.
 """
@@ -16,10 +17,12 @@ from __future__ import annotations
 import argparse
 import json
 
-# gated structural columns (benchmarks.run MONOTONE_COLS + FLOOR_COLS),
-# duplicated literally so this module stays importable without jax
+# gated structural columns (benchmarks.run MONOTONE_COLS + FLOOR_COLS +
+# the quantized-wire entries of EXACT_COLS), duplicated literally so
+# this module stays importable without jax
 COLUMNS = ("vmem_bytes", "launch_ratio", "buffer_ratio",
-           "peak_gather_bytes")
+           "peak_gather_bytes", "bytes_on_wire", "compression_ratio",
+           "audit_wire_dtype")
 
 
 def _fmt(v) -> str:
@@ -70,8 +73,11 @@ def render(baseline: list[dict], fresh: list[dict]) -> str:
     lines += ["",
               "us/call is interpret-mode wall time (load noise; gated only "
               "at 5x). The structural columns are exact and gated: "
-              "vmem/buffer/peak-gather may not grow, launch_ratio may not "
-              "shrink."]
+              "vmem/buffer/peak-gather and the quantized-wire "
+              "bytes_on_wire/compression_ratio may not grow, launch_ratio "
+              "may not shrink, audit_wire_dtype must equal the baseline "
+              "(GBA-COLL-005 verdict: the policy dtype when the compressed "
+              "trace is leak-free)."]
     return "\n".join(lines)
 
 

@@ -12,9 +12,11 @@ trajectory is machine-readable across PRs.
 baseline JSON (default ``BENCH_kernels.json``) and exits non-zero on a
 >5x ``us_per_call`` regression (interpret-mode wall time is load noise;
 only catastrophic algorithmic blowups should trip it), any growth of a
-``vmem_bytes``, ``buffer_ratio`` or ``peak_gather_bytes`` column, any
+``vmem_bytes``, ``buffer_ratio``, ``peak_gather_bytes``,
+``gather_ratio``, ``bytes_on_wire`` or ``compression_ratio`` column, any
 shrink of a ``launch_ratio`` column, any change at all of an ``audit_*``
-column (auditor-derived collective census / launch-meta VMEM), a
+column (auditor-derived collective census / launch-meta VMEM /
+quantized-wire dtype verdict), a
 baseline row that disappeared, or a fresh row missing from the baseline
 (uncommitted drift: adding a bench row without regenerating and
 committing the JSON fails fast) — the CI perf gate (scripts/ci.sh).
@@ -35,14 +37,16 @@ JSON_SUITES = ("kernels", "roofline")
 # algorithmic blowups (serialized grids, O(V) work) — the structural
 # columns below are gated exactly.
 US_REGRESSION = 5.0
-MONOTONE_COLS = ("vmem_bytes", "buffer_ratio",
-                 "peak_gather_bytes")            # --check: no growth at all
+MONOTONE_COLS = ("vmem_bytes", "buffer_ratio", "peak_gather_bytes",
+                 "gather_ratio", "bytes_on_wire",
+                 "compression_ratio")            # --check: no growth at all
 FLOOR_COLS = ("launch_ratio",)                   # --check: no shrink at all
 # --check: must EQUAL the baseline.  Auditor-derived structural columns
 # (collective census counts, launch-meta VMEM): any drift means the
 # collective schedule or kernel geometry changed, which must be a
 # deliberate baseline regeneration, never noise.
-EXACT_COLS = ("audit_all_gather", "audit_all_to_all", "audit_vmem_bytes")
+EXACT_COLS = ("audit_all_gather", "audit_all_to_all", "audit_vmem_bytes",
+              "audit_wire_dtype")
 
 
 def parse_derived(derived: str) -> dict:
@@ -126,14 +130,16 @@ def check_records(fresh: list[dict], baseline_path: str) -> list[str]:
                     failures.append(
                         f"{name}: {col} shrank {base[col]:g} -> {c_val:g}")
         for col in EXACT_COLS:
-            if col in base and isinstance(base[col], float):
+            # auditor columns are floats (census counts, VMEM) or strings
+            # (audit_wire_dtype); both gate on exact equality
+            if col in base and isinstance(base[col], (float, str)):
                 c_val = cur.get(col)
                 if c_val is None:
                     failures.append(f"{name}: {col} column disappeared")
                 elif c_val != base[col]:
                     failures.append(
-                        f"{name}: {col} changed {base[col]:g} -> "
-                        f"{c_val:g} (exact-gated auditor column)")
+                        f"{name}: {col} changed {base[col]} -> "
+                        f"{c_val} (exact-gated auditor column)")
     return failures
 
 
@@ -225,8 +231,10 @@ def main() -> None:
         gated = MONOTONE_COLS + FLOOR_COLS + EXACT_COLS
         print(f"{'gated row':<55} {'us/call':>10}  gated columns")
         for r in records:
-            cols = " ".join(f"{k}={r[k]:g}" for k in gated
-                            if isinstance(r.get(k), float))
+            cols = " ".join(
+                f"{k}={r[k]:g}" if isinstance(r[k], float) else
+                f"{k}={r[k]}" for k in gated
+                if isinstance(r.get(k), (float, str)))
             print(f"{r['name']:<55} {r['us_per_call']:>10.1f}  {cols}")
     if failures:
         sys.exit(1)

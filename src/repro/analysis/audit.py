@@ -86,15 +86,23 @@ def arch_layout(cfg, m: int = AUDIT_M) -> ShardedFlatLayout:
 
 
 def trace_fused_step(layout: ShardedFlatLayout, m: int, loss_fn,
-                     batch, *, axis: str = "data"):
+                     batch, *, axis: str = "data", compress=None,
+                     warm: bool = False):
     """Closed jaxpr of the layer-grouped fused psum step — the artifact
-    every GBA-COLL/DTYPE rule (and the bench census columns) reads."""
+    every GBA-COLL/DTYPE rule (and the bench census columns) reads.
+    With a lossy ``compress`` policy the step carries the per-worker
+    wire state (residual/momentum), traced as abstract args."""
     step = make_gba_fused_psum_step(
         abstract_mesh(m, axis), loss_fn, layout, iota=AUDIT_IOTA,
-        lr=AUDIT_LR, axis=axis)
+        lr=AUDIT_LR, axis=axis, compress=compress, warm=warm)
     flat = SDS((layout.padded_total,), jnp.float32)
+    if compress is None or not compress.stateful:
+        return jax.make_jaxpr(step)(
+            flat, flat, batch, SDS((m,), jnp.int32), SDS((), jnp.int32))
+    wire = {name: SDS(shape, jnp.float32) for name, shape in
+            layout.wire_state_shapes(m, compress.scheme).items()}
     return jax.make_jaxpr(step)(
-        flat, flat, batch, SDS((m,), jnp.int32), SDS((), jnp.int32))
+        flat, flat, batch, SDS((m,), jnp.int32), SDS((), jnp.int32), wire)
 
 
 @dataclass
@@ -143,6 +151,34 @@ def audit_arch(arch: str, *, m: int = AUDIT_M,
     jp = trace_fused_step(layout, m, probe_loss, probe_batch)
     rep.findings += JA.check_widening_budget(
         jp, widening_budget(layout), f"{arch}/fused_psum/probe")
+
+    # g. compressed-wire traces (probe loss — COLL-005 only reads the
+    # collective census): each lossy scheme's past-warmup jaxpr must
+    # carry exactly the declared wire dtypes (no f32 leakage), psum
+    # scalars only; the warmup-phase jaxpr must be the PR-5 f32 schedule
+    from repro.core.compression import CompressionPolicy
+    for scheme in ("int8", "onebit"):
+        pol = CompressionPolicy(scheme=scheme, warmup_steps=1)
+        site = f"{arch}/fused_psum/{scheme}"
+        jc = trace_fused_step(layout, m, probe_loss, probe_batch,
+                              compress=pol)
+        rep.findings += JA.check_wire_dtypes(jc, layout, m, pol, site)
+        rep.findings += JA.check_scalar_psum_only(jc, site)
+        rep.findings += JA.check_no_f64(jc, site)
+        if scheme == "int8":
+            ccounts = JA.census_counts(JA.collective_census(jc))
+            rep.stats.update(
+                wire_dtype=pol.wire_dtype(),
+                wire_bytes=pol.wire_bytes(layout),
+                compression_ratio=round(pol.compression_ratio(layout), 4),
+                compressed_all_to_all=ccounts.get("all_to_all", 0))
+            jw = trace_fused_step(layout, m, probe_loss, probe_batch,
+                                  compress=pol, warm=True)
+            wsite = f"{arch}/fused_psum/warmup"
+            rep.findings += JA.check_wire_dtypes(jw, layout, m, pol,
+                                                 wsite, warm=True)
+            rep.findings += JA.check_fused_psum_schedule(jw, layout, m,
+                                                         wsite)
 
     # c. sync psum step: per-leaf grads + scalar loss, nothing else
     opt = get_optimizer("adagrad", AUDIT_LR)
@@ -193,13 +229,17 @@ def audit_arch(arch: str, *, m: int = AUDIT_M,
 def kernel_metas():
     """Arch-independent kernel launches at their bench shapes."""
     from repro.kernels import (embedding_bag, flash_decode, fused_adagrad,
-                               gba_aggregate)
+                               gba_aggregate, quantize)
     return (
         fused_adagrad.launch_meta(1 << 16),
         gba_aggregate.launch_meta(1 << 16, 8),
         embedding_bag.fwd_launch_meta(32, 26, 100_000, 128),
         embedding_bag.bwd_launch_meta(32, 26, 100_000, 128),
         flash_decode.launch_meta(4, 32_768, 8, 4, 128),
+        quantize.quantize_launch_meta(8, 1 << 14, 2048, "minmax"),
+        quantize.quantize_launch_meta(8, 1 << 14, 2048, "sign"),
+        quantize.dequant_launch_meta(8, 1 << 14, 2048, "minmax"),
+        quantize.dequant_launch_meta(8, 1 << 14, 2048, "sign"),
     )
 
 

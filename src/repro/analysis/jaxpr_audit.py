@@ -144,6 +144,64 @@ def check_fused_psum_schedule(jaxpr, layout, m: int,
     return findings
 
 
+def expected_wire_collectives(layout, m: int, policy, warm: bool = False):
+    """The declared wire of a compressed fused-psum step: per-group
+    ``all_to_all`` operand ``(shape, dtype)`` lists under ``policy``.
+
+    Past warmup each group routes its int8 payload plus the per-tile f32
+    sideband(s) — scale and zero-point for int8 min-max, the single norm
+    for onebit sign; during warmup (or scheme ``none``) each group routes
+    one f32 ``(m, group_shard)`` operand, the PR-5 wire."""
+    per_group = []
+    for g in range(layout.num_groups):
+        gsh = layout.group_shard_sizes[g]
+        if warm or policy.scheme == "none":
+            per_group.append([((m, gsh), "float32")])
+            continue
+        n_tiles = gsh // layout.tile
+        ops = [((m, gsh), "int8"), ((m, n_tiles), "float32")]
+        if policy.scheme == "int8":
+            ops.append(((m, n_tiles), "float32"))    # zero-point sideband
+        per_group.append(ops)
+    return per_group
+
+
+def check_wire_dtypes(jaxpr, layout, m: int, policy, site: str,
+                      warm: bool = False) -> list[Finding]:
+    """GBA-COLL-005: every ``all_to_all``/``all_gather`` operand dtype on
+    a traced fused-psum step matches the declared ``CompressionPolicy``.
+
+    Routing: the flattened per-group (shape, dtype) sequence must equal
+    :func:`expected_wire_collectives` exactly — an f32 ``(m,
+    group_shard)`` operand in a past-warmup trace is full-precision
+    leakage and fails CI.  Gathers: params always travel f32 (compression
+    is a routing-stage transform) and the token gather stays int32."""
+    census = collective_census(jaxpr)
+    findings = []
+    expected = [op for group in
+                expected_wire_collectives(layout, m, policy, warm=warm)
+                for op in group]
+    routes = [(c.in_shapes[0], c.in_dtypes[0])
+              for c in census if c.op == "all_to_all"]
+    if routes != expected:
+        findings.append(finding(
+            "GBA-COLL-005", site,
+            f"all_to_all wire {routes} != declared "
+            f"{policy.scheme}{' warmup' if warm else ''} wire {expected}"))
+    token = (1,)
+    for c in census:
+        if c.op != "all_gather":
+            continue
+        want = "int32" if c.in_shapes[0] == token else "float32"
+        if c.in_dtypes[0] != want:
+            findings.append(finding(
+                "GBA-COLL-005", site,
+                f"all_gather operand {c.in_shapes[0]} has dtype "
+                f"{c.in_dtypes[0]}, expected {want} (params travel full "
+                f"precision; compression is routing-stage only)"))
+    return findings
+
+
 def check_scalar_psum_only(jaxpr, site: str, census=None) -> list[Finding]:
     """GBA-COLL-002: psum reduces scalars only."""
     census = collective_census(jaxpr) if census is None else census

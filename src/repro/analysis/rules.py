@@ -26,6 +26,12 @@ RULES: dict[str, str] = {
     "GBA-COLL-004": (
         "the sync psum step reduces exactly the per-leaf decayed "
         "gradients plus one scalar loss — no gathers, no all_to_all"),
+    "GBA-COLL-005": (
+        "every all_to_all/all_gather operand dtype on the fused-psum "
+        "wire matches the declared CompressionPolicy: per group, one "
+        "int8 payload + the per-tile f32 sideband(s) past warmup, one "
+        "f32 operand during warmup/none — full-precision leakage after "
+        "warmup is a CI failure"),
     "GBA-DTYPE-001": (
         "no silent f32 upcast on the gradient path: widening float "
         "convert_element_type count equals the sanctioned per-leaf "

@@ -31,6 +31,11 @@ class AutoSwitchController:
     mode: str = "sync"
     max_history: int = 4096     # decisions kept; long runs stay bounded
     history: list = field(default_factory=list)
+    # optional per-mode wire cost, mode -> estimated bytes each worker
+    # puts on the wire per global step (e.g. from
+    # CompressionPolicy.wire_bytes / layout.padded_total * 4).  Telemetry
+    # plumbing ONLY — the switching policy never reads it.
+    wire_bytes_per_step: dict | None = None
 
     def estimate_speedup(self, worker_rates) -> float:
         """worker_rates: per-worker samples/s measured over the window
@@ -61,3 +66,21 @@ class AutoSwitchController:
         if len(self.history) > self.max_history:
             del self.history[:len(self.history) - self.max_history]
         return self.mode
+
+    def summary(self) -> dict:
+        """Telemetry snapshot: current mode, last estimated speedup
+        (NaN before any decision — including one made on an empty
+        window), decision count, and — when ``wire_bytes_per_step`` was
+        provided — the current mode's estimated ``bytes_on_wire`` per
+        worker per global step plus the full per-mode map.  Read-only:
+        never mutates controller state or the switching policy."""
+        out = {
+            "mode": self.mode,
+            "last_speedup": (self.history[-1][0] if self.history
+                             else float("nan")),
+            "decisions": len(self.history),
+        }
+        if self.wire_bytes_per_step is not None:
+            out["bytes_on_wire"] = self.wire_bytes_per_step.get(self.mode)
+            out["wire_bytes_per_step"] = dict(self.wire_bytes_per_step)
+        return out

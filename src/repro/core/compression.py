@@ -1,0 +1,129 @@
+"""Wire-compression policy for the layer-grouped fused-psum schedule.
+
+At production model sizes the per-group ``all_to_all`` (gradient routing)
+is the per-step byte bill of a PS global step — the ``gba_apply`` kernel
+is µs of roofline while the wire moves 4 bytes per parameter per worker.
+:class:`CompressionPolicy` declares how that routing stage is compressed:
+
+``none``
+    f32 gradients on the wire — the PR-5 schedule, bit-identical.
+``int8``
+    Min-max affine quantization (the Bagua ``MinMaxUInt8`` idiom): per
+    tile-aligned slice of the shard-major flat, ``zero_point = min`` and
+    ``scale = (max - min) / 255``; values travel as int8 (the uint8 code
+    shifted by -128) plus two f32 sideband words per tile.  ~0.25x bytes.
+``onebit``
+    1-bit-with-momentum (the Bagua onebit idiom): full-precision routing
+    for :attr:`warmup_steps` global steps while a per-worker momentum
+    EMA accumulates, then each step routes ``sign(momentum + residual)``
+    as int8 plus one f32 per-tile mean-|.| norm.  ~0.25x bytes here
+    (int8-coded signs; true bit-packing is a TPU-side follow-up).
+
+Both lossy schemes carry **per-worker error-feedback residuals**: the
+worker adds its residual to the payload before quantizing and keeps
+``payload - dequantize(quantize(payload))`` for the next step, so
+quantization error is re-injected instead of lost (the EF-signSGD /
+1-bit Adam convergence argument).  Residuals (and the onebit momentum)
+live in ``(M, padded_total)`` flat arrays whose column order is the
+layout's shard-major order, so per-group views are the same
+``group_shard_bounds`` column slices the routing stage already uses —
+the buffers ride the existing ``(M, shard)`` machinery and survive
+``shard_map`` unchanged (row ``w`` is worker ``w``'s state, sharded
+``P(axis, None)``).
+
+The policy is also the auditor's ground truth: GBA-COLL-005
+(``repro.analysis``) checks every ``all_to_all``/``all_gather`` operand
+dtype in the traced compressed step against
+:meth:`CompressionPolicy.wire_dtype` — full-precision leakage after
+warmup is a CI failure, not a silent perf regression.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+SCHEMES = ("none", "int8", "onebit")
+
+
+@dataclass(frozen=True)
+class CompressionPolicy:
+    """Declared compression of the gradient-routing wire.
+
+    ``warmup_steps`` global steps route full precision (f32) before the
+    compressed wire switches on; the step function is built per phase
+    (``warm=True`` / ``False`` in ``make_gba_fused_psum_step``) so each
+    phase's jaxpr has exactly one wire dtype for the census to check.
+    ``momentum`` is the onebit EMA coefficient (ignored by int8).
+    """
+
+    scheme: str = "none"
+    warmup_steps: int = 0
+    momentum: float = 0.9
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(
+                f"unknown compression scheme {self.scheme!r}; "
+                f"expected one of {SCHEMES}")
+        if self.warmup_steps < 0:
+            raise ValueError(f"warmup_steps must be >= 0, "
+                             f"got {self.warmup_steps}")
+        if not 0.0 <= self.momentum < 1.0:
+            raise ValueError(f"momentum must be in [0, 1), "
+                             f"got {self.momentum}")
+
+    # -- state ---------------------------------------------------------------
+    @property
+    def stateful(self) -> bool:
+        """Whether the step carries wire state (residual/momentum)."""
+        return self.scheme != "none"
+
+    def state_names(self) -> tuple[str, ...]:
+        if self.scheme == "int8":
+            return ("residual",)
+        if self.scheme == "onebit":
+            return ("residual", "momentum")
+        return ()
+
+    def init_wire_state(self, layout, m: int) -> dict:
+        """Zero wire state: one ``(m, padded_total)`` f32 row per worker,
+        columns in the layout's shard-major order."""
+        return {name: jnp.zeros((m, layout.padded_total), jnp.float32)
+                for name in self.state_names()}
+
+    # -- wire accounting -----------------------------------------------------
+    def wire_dtype(self, warm: bool = False) -> str:
+        """Dtype of the gradient payload on the ``all_to_all`` wire."""
+        if warm or self.scheme == "none":
+            return "float32"
+        return "int8"
+
+    def sideband_floats_per_tile(self) -> int:
+        """f32 sideband words routed per quantization tile."""
+        if self.scheme == "int8":
+            return 2                    # scale + zero_point
+        if self.scheme == "onebit":
+            return 1                    # per-tile mean-|.| norm
+        return 0
+
+    def route_bytes(self, group_size: int, tile: int,
+                    warm: bool = False) -> int:
+        """Per-device bytes one group's routing stage puts on the
+        ``all_to_all`` wire per global step (payload + sideband)."""
+        if warm or self.scheme == "none":
+            return group_size * 4
+        if group_size % tile:
+            raise ValueError(f"group_size {group_size} not a multiple of "
+                             f"tile {tile}")
+        n_tiles = group_size // tile
+        return group_size + self.sideband_floats_per_tile() * n_tiles * 4
+
+    def wire_bytes(self, layout, warm: bool = False) -> int:
+        """Total per-device gradient bytes on the wire per global step."""
+        return sum(self.route_bytes(gs, layout.tile, warm=warm)
+                   for gs in layout.group_sizes)
+
+    def compression_ratio(self, layout) -> float:
+        """Compressed / full-precision routed bytes (1.0 for ``none``)."""
+        return self.wire_bytes(layout) / (layout.padded_total * 4)

@@ -197,13 +197,41 @@ class ShardedFlatLayout:
         """Leaf indices belonging to group ``g``, in treedef order."""
         return tuple(j for j, lg in enumerate(self.leaf_group) if lg == g)
 
-    def group_table(self) -> list[dict]:
-        """Host-side summary, one entry per group (for logs / benches)."""
-        return [{"key": k,
-                 "elements": self.group_sizes[g],
-                 "bytes": self.group_sizes[g] * 4,
-                 "leaves": len(self.group_leaves(g))}
-                for g, k in enumerate(self.group_keys)]
+    def group_table(self, compress=None) -> list[dict]:
+        """Host-side summary, one entry per group (for logs / benches).
+
+        With a ``CompressionPolicy`` (``core.compression``), each entry
+        additionally reports the group's routed ``wire_bytes`` (payload +
+        per-tile sideband) and ``wire_dtype`` under that policy; without
+        one the wire is the full-precision f32 routing (``wire_bytes ==
+        bytes``)."""
+        rows = []
+        for g, k in enumerate(self.group_keys):
+            row = {"key": k,
+                   "elements": self.group_sizes[g],
+                   "bytes": self.group_sizes[g] * 4,
+                   "leaves": len(self.group_leaves(g))}
+            if compress is None:
+                row["wire_bytes"] = row["bytes"]
+                row["wire_dtype"] = "float32"
+            else:
+                row["wire_bytes"] = compress.route_bytes(
+                    self.group_sizes[g], self.tile)
+                row["wire_dtype"] = compress.wire_dtype()
+            rows.append(row)
+        return rows
+
+    def wire_state_shapes(self, m: int, scheme: str) -> dict:
+        """Shapes of the per-worker wire-compression state (error-feedback
+        residual, onebit momentum): one ``(m, padded_total)`` f32 row per
+        worker, columns in this layout's shard-major order so per-group
+        views are the :meth:`group_shard_bounds` column slices the routing
+        stage already uses."""
+        names = {"none": (), "int8": ("residual",),
+                 "onebit": ("residual", "momentum")}
+        if scheme not in names:
+            raise ValueError(f"unknown compression scheme {scheme!r}")
+        return {name: (m, self.padded_total) for name in names[scheme]}
 
     # -- ravel / unravel ----------------------------------------------------
     def ravel_group(self, g: int, tree: Params) -> jax.Array:

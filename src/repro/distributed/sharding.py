@@ -218,6 +218,22 @@ def flat_slice_specs(layout: Any, mesh: Mesh, axis: str = "data") -> dict:
     }
 
 
+def wire_state_specs(layout: Any, mesh: Mesh, scheme: str,
+                     axis: str = "data") -> dict:
+    """PartitionSpecs for the compressed-wire state of
+    ``core.gba_shard_map.make_gba_fused_psum_step``: per-worker
+    error-feedback residual (and onebit momentum) rows of shape
+    ``(M, padded_total)``, row ``w`` = worker ``w``'s state — split over
+    ``axis`` on the worker axis, columns local (``P(axis, None)``).
+    Returns one spec per ``layout.wire_state_shapes`` entry ({} for
+    ``scheme="none"``).  Reuses :func:`flat_slice_specs`'s geometry
+    validation so a stale layout fails at spec-build time."""
+    flat_slice_specs(layout, mesh, axis)        # geometry validation only
+    m = _axis_size(mesh, axis)
+    return {name: P(axis, None)
+            for name in layout.wire_state_shapes(m, scheme)}
+
+
 def fused_state_specs(layout: Any, mesh: Mesh, pspecs: Any,
                       axis: str = "data") -> dict:
     """Spec tree for ``launch.steps``'s fused train state: model params

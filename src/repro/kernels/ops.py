@@ -19,6 +19,7 @@ from repro.kernels.embedding_bag import embedding_bag, embedding_bag_grad
 from repro.kernels.fused_adagrad import fused_adagrad
 from repro.kernels.gba_aggregate import gba_aggregate
 from repro.kernels.gba_apply import gba_apply
+from repro.kernels.quantize import dequantize, quantize_minmax, quantize_sign
 from repro.kernels.runtime import set_interpret  # noqa: F401  (re-export)
 
 
@@ -47,6 +48,31 @@ def gba_apply_flat(param_flat: jax.Array, accum_flat: jax.Array,
     single-launch PS apply path (see repro.core.gba.FlatLayout)."""
     return gba_apply(param_flat, accum_flat, buffer, tokens, step, lr,
                      iota=iota, eps=eps, interpret=runtime.resolve(interpret))
+
+
+def quantize_wire(payload: jax.Array, *, tile: int, mode: str,
+                  interpret: bool | None = None):
+    """Quantize a routing payload with fused error feedback.
+
+    ``mode="minmax"`` -> ``(qvals, scale, zero, residual)``;
+    ``mode="sign"``   -> ``(qvals, scale, residual)`` (no zero-point).
+    See ``repro.kernels.quantize``.
+    """
+    itp = runtime.resolve(interpret)
+    if mode == "minmax":
+        return quantize_minmax(payload, tile=tile, interpret=itp)
+    if mode == "sign":
+        return quantize_sign(payload, tile=tile, interpret=itp)
+    raise ValueError(f"unknown quantize mode {mode!r}")
+
+
+def dequantize_wire(qvals: jax.Array, scale: jax.Array,
+                    zero: jax.Array | None = None, *, tile: int, mode: str,
+                    interpret: bool | None = None) -> jax.Array:
+    """Reconstruct the f32 payload from routed wire arrays (see
+    ``repro.kernels.quantize.dequantize``)."""
+    return dequantize(qvals, scale, zero, tile=tile, mode=mode,
+                      interpret=runtime.resolve(interpret))
 
 
 def adagrad_apply_tree(params: Any, grads: Any, accums: Any, lr, *,

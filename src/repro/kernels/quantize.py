@@ -1,0 +1,251 @@
+"""Pallas TPU kernels: wire quantization for the fused-psum routing stage.
+
+The layer-grouped fused-psum schedule (``core.gba_shard_map``) routes
+each group's ``(M, group_shard)`` gradient block through an
+``all_to_all``.  These kernels transform that block at the wire boundary
+so the payload travels as int8 instead of f32:
+
+``quantize_minmax``
+    Bagua ``MinMaxUInt8`` idiom, per ``tile``-aligned slice of each row
+    (the same tile the layout aligns shard slices to):
+    ``zero_point = min``, ``scale = (max - min) / 255``, code =
+    ``round((x - zp) / scale)`` in [0, 255] stored as int8 (code - 128).
+``quantize_sign``
+    1-bit idiom: ``sign(x)`` as int8 with a per-tile mean-|x| norm as
+    the single f32 sideband word.
+
+Both quantizers emit the **error-feedback residual**
+``payload - dequantize(quantize(payload))`` in the same VMEM pass — the
+payload and its dequantized image are both already in VMEM, so error
+feedback costs no extra launch and no extra HBM round-trip, and the
+residual is bit-exactly consistent with what ``dequantize`` reconstructs
+on the receiving shard (identical arithmetic, identical sideband).
+
+Per-tile scale/zero sidebands are ``(R, n_tiles)`` f32 arrays held fully
+VMEM-resident across the grid (constant index map — they are ~1/tile of
+the payload) while the payload streams through ``(R, tile)`` blocks; each
+grid step writes its own sideband column with a dynamic ``pl.ds`` store.
+Every launch exports a :class:`~repro.kernels.launch_meta.LaunchMeta`
+the real ``pallas_call`` builds its specs from, so the static auditor
+(``repro.analysis``) checks tiles/VMEM/grid of the launch that runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.launch_meta import BlockMeta, LaunchMeta, block_specs
+
+MODES = ("minmax", "sign")
+
+
+def _check_geometry(r: int, c: int, tile: int) -> int:
+    if tile < 1:
+        raise ValueError(f"tile must be >= 1, got {tile}")
+    if c % tile:
+        raise ValueError(
+            f"payload columns {c} not a multiple of tile {tile} — the "
+            f"routing stage only quantizes tile-aligned group slices")
+    return c // tile
+
+
+def quantize_vmem_bytes(r: int, c: int, tile: int, mode: str) -> int:
+    """Per-grid-step VMEM residency of a quantize launch: payload in +
+    residual out f32 blocks, int8 code block, and the fully-resident
+    f32 sideband(s) (scale, plus zero-point for minmax)."""
+    n_tiles = _check_geometry(r, c, tile)
+    sidebands = 2 if mode == "minmax" else 1
+    return r * tile * 4 + r * tile * 1 + r * tile * 4 \
+        + sidebands * r * n_tiles * 4
+
+
+def dequant_vmem_bytes(r: int, c: int, tile: int, mode: str) -> int:
+    """Per-grid-step VMEM residency of a dequantize launch: int8 code
+    block + f32 out block + resident sideband(s)."""
+    n_tiles = _check_geometry(r, c, tile)
+    sidebands = 2 if mode == "minmax" else 1
+    return r * tile * 1 + r * tile * 4 + sidebands * r * n_tiles * 4
+
+
+def _sideband_blocks(r: int, n_tiles: int, names: tuple[str, ...]
+                     ) -> tuple[BlockMeta, ...]:
+    # constant index map: the whole (R, n_tiles) sideband stays VMEM-
+    # resident across the grid; grid step i owns column i
+    return tuple(BlockMeta(name, (r, n_tiles), jnp.float32, (r, n_tiles),
+                           lambda i: (0, 0))
+                 for name in names)
+
+
+def quantize_launch_meta(r: int, c: int, tile: int, mode: str) -> LaunchMeta:
+    """Static launch geometry of a ``(r, c)`` payload quantize; the real
+    ``pallas_call`` builds its specs from this."""
+    if mode not in MODES:
+        raise ValueError(f"unknown quantize mode {mode!r}")
+    n_tiles = _check_geometry(r, c, tile)
+    sidebands = ("scale", "zero") if mode == "minmax" else ("scale",)
+    return LaunchMeta(
+        kernel=f"quantize_{mode}",
+        grid=(n_tiles,),
+        inputs=(
+            BlockMeta("payload", (r, c), jnp.float32, (r, tile),
+                      lambda i: (0, i)),
+        ),
+        outputs=(
+            BlockMeta("qvals", (r, c), jnp.int8, (r, tile),
+                      lambda i: (0, i)),
+            *_sideband_blocks(r, n_tiles, sidebands),
+            BlockMeta("residual", (r, c), jnp.float32, (r, tile),
+                      lambda i: (0, i)),
+        ),
+        declared_vmem_bytes=quantize_vmem_bytes(r, c, tile, mode),
+        vmem_counted=("payload", "qvals", *sidebands, "residual"),
+    )
+
+
+def dequant_launch_meta(r: int, c: int, tile: int, mode: str) -> LaunchMeta:
+    """Static launch geometry of the matching dequantize."""
+    if mode not in MODES:
+        raise ValueError(f"unknown dequantize mode {mode!r}")
+    n_tiles = _check_geometry(r, c, tile)
+    sidebands = ("scale", "zero") if mode == "minmax" else ("scale",)
+    return LaunchMeta(
+        kernel=f"dequantize_{mode}",
+        grid=(n_tiles,),
+        inputs=(
+            BlockMeta("qvals", (r, c), jnp.int8, (r, tile),
+                      lambda i: (0, i)),
+            *_sideband_blocks(r, n_tiles, sidebands),
+        ),
+        outputs=(
+            BlockMeta("out", (r, c), jnp.float32, (r, tile),
+                      lambda i: (0, i)),
+        ),
+        declared_vmem_bytes=dequant_vmem_bytes(r, c, tile, mode),
+        vmem_counted=("qvals", *sidebands, "out"),
+    )
+
+
+def _minmax_kernel(pay_ref, q_ref, sc_ref, zp_ref, res_ref):
+    i = pl.program_id(0)
+    x = pay_ref[...]                                   # (R, tile) f32
+    mn = jnp.min(x, axis=1, keepdims=True)             # (R, 1)
+    mx = jnp.max(x, axis=1, keepdims=True)
+    scale = (mx - mn) / 255.0
+    safe = jnp.where(scale > 0.0, scale, 1.0)          # constant tile -> q=0
+    code = jnp.clip(jnp.round((x - mn) / safe), 0.0, 255.0)
+    q = (code - 128.0).astype(jnp.int8)
+    q_ref[...] = q
+    sc_ref[:, pl.ds(i, 1)] = scale
+    zp_ref[:, pl.ds(i, 1)] = mn
+    # same expression as _dequant_minmax_kernel -> residual is consistent
+    # with the receiving shard's reconstruction
+    deq = (q.astype(jnp.float32) + 128.0) * scale + mn
+    res_ref[...] = x - deq
+
+
+def _sign_kernel(pay_ref, q_ref, sc_ref, res_ref):
+    i = pl.program_id(0)
+    x = pay_ref[...]
+    scale = jnp.mean(jnp.abs(x), axis=1, keepdims=True)
+    q = jnp.where(x >= 0.0, 1, -1).astype(jnp.int8)
+    q_ref[...] = q
+    sc_ref[:, pl.ds(i, 1)] = scale
+    deq = q.astype(jnp.float32) * scale
+    res_ref[...] = x - deq
+
+
+def _dequant_minmax_kernel(q_ref, sc_ref, zp_ref, out_ref):
+    i = pl.program_id(0)
+    scale = sc_ref[:, pl.ds(i, 1)]
+    zp = zp_ref[:, pl.ds(i, 1)]
+    out_ref[...] = (q_ref[...].astype(jnp.float32) + 128.0) * scale + zp
+
+
+def _dequant_sign_kernel(q_ref, sc_ref, out_ref):
+    i = pl.program_id(0)
+    out_ref[...] = q_ref[...].astype(jnp.float32) * sc_ref[:, pl.ds(i, 1)]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def quantize_minmax(payload: jax.Array, *, tile: int, interpret: bool = True
+                    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Min-max int8 quantize with fused error feedback.
+
+    payload: (R, C) f32, C a ``tile`` multiple ->
+    ``(qvals int8 (R, C), scale f32 (R, C//tile), zero f32 (R, C//tile),
+    residual f32 (R, C))`` with ``residual == payload -
+    dequantize(qvals, scale, zero)`` exactly.
+    """
+    r, c = payload.shape
+    n_tiles = _check_geometry(r, c, tile)
+    meta = quantize_launch_meta(r, c, tile, "minmax")
+    return pl.pallas_call(
+        _minmax_kernel,
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=block_specs(meta.outputs),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.int8),
+            jax.ShapeDtypeStruct((r, n_tiles), jnp.float32),
+            jax.ShapeDtypeStruct((r, n_tiles), jnp.float32),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(payload.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def quantize_sign(payload: jax.Array, *, tile: int, interpret: bool = True
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sign (1-bit) quantize with per-tile mean-|x| norm and fused error
+    feedback: payload (R, C) f32 -> ``(qvals int8 ±1, scale f32
+    (R, C//tile), residual f32 (R, C))``."""
+    r, c = payload.shape
+    n_tiles = _check_geometry(r, c, tile)
+    meta = quantize_launch_meta(r, c, tile, "sign")
+    return pl.pallas_call(
+        _sign_kernel,
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=block_specs(meta.outputs),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.int8),
+            jax.ShapeDtypeStruct((r, n_tiles), jnp.float32),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(payload.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "mode", "interpret"))
+def dequantize(qvals: jax.Array, scale: jax.Array,
+               zero: jax.Array | None = None, *, tile: int, mode: str,
+               interpret: bool = True) -> jax.Array:
+    """Reconstruct the f32 payload from the routed wire arrays.
+
+    qvals: (R, C) int8; scale (and, for ``mode="minmax"``, zero):
+    (R, C//tile) f32 -> (R, C) f32.
+    """
+    r, c = qvals.shape
+    _check_geometry(r, c, tile)
+    if mode == "minmax":
+        if zero is None:
+            raise ValueError("minmax dequantize needs the zero-point array")
+        kernel, operands = _dequant_minmax_kernel, (qvals, scale, zero)
+    elif mode == "sign":
+        kernel, operands = _dequant_sign_kernel, (qvals, scale)
+    else:
+        raise ValueError(f"unknown dequantize mode {mode!r}")
+    meta = dequant_launch_meta(r, c, tile, mode)
+    out, = pl.pallas_call(
+        kernel,
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=block_specs(meta.outputs),
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out

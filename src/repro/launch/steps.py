@@ -266,6 +266,50 @@ def jit_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
         donate_argnums=0)
 
 
+def make_wire_psum_steps(cfg: ModelConfig, gba: GBAConfig, layout,
+                         mesh: Mesh, *, compress=None, lr: float = 1e-3,
+                         eps: float = 1e-10, axis: str = "data"):
+    """Jitted (warm_step, compressed_step) pair for the worker-parallel
+    layer-grouped fused-psum schedule (``core.gba_shard_map``) with an
+    optional quantized wire (``core.compression.CompressionPolicy``).
+
+    Both phases share the model loss (``_loss_from_batch``).  With a
+    lossy policy the two entries are SEPARATE jitted programs — warmup
+    routes f32 (PR-5 bit-exact), the compressed phase routes int8 + the
+    per-tile sideband — and the driver (``launch.train``) switches at the
+    ``compress.warmup_steps`` boundary by calling the other function,
+    i.e. a re-jit, so each phase's jaxpr carries exactly one wire dtype
+    (auditor rule GBA-COLL-005).  With ``compress=None`` / scheme
+    ``"none"`` both entries are the same 5-arg uncompressed step.
+    """
+    from repro.core.gba_shard_map import make_gba_fused_psum_step
+
+    def loss_fn(params, batch):
+        return _loss_from_batch(params, cfg, batch)
+
+    build = functools.partial(
+        make_gba_fused_psum_step, mesh, loss_fn, layout,
+        iota=gba.staleness_tolerance, lr=lr, eps=eps, axis=axis,
+        compress=compress)
+    if compress is None or not compress.stateful:
+        step = jax.jit(build())
+        return step, step
+    return jax.jit(build(warm=True)), jax.jit(build(warm=False))
+
+
+def init_wire_state(layout, compress, mesh: Mesh, axis: str = "data"):
+    """Zero per-worker wire state (residual, and momentum for onebit)
+    placed with ``distributed.sharding.wire_state_specs`` —
+    ``(M, padded_total)`` f32 rows sharded ``P(axis, None)`` so worker
+    ``w``'s row lives with worker ``w``.  ``None`` for lossless
+    policies."""
+    if compress is None or not compress.stateful:
+        return None
+    wire = compress.init_wire_state(layout, mesh.shape[axis])
+    specs = S.wire_state_specs(layout, mesh, compress.scheme, axis)
+    return jax.device_put(wire, S.to_named(specs, mesh))
+
+
 def opt_state_specs(optimizer: Optimizer, pspecs: Any) -> Any:
     if optimizer.name == "adam":
         return {"m": pspecs, "v": pspecs, "count": P()}

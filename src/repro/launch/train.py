@@ -30,6 +30,17 @@ before jax device init — the same path the shard_map tests use):
 
     PYTHONPATH=src python -m repro.launch.train --arch kimi-k2-1t-a32b \
         --reduced --fused --mesh 4x1 --host-devices 4 --steps 8
+
+``--compress {int8,onebit}`` (with ``--fused`` and a multi-device data
+axis) switches to the worker-parallel fused-psum loop with a quantized
+routing wire (core.gba_shard_map + core.compression): f32 warmup for
+``--compress-warmup`` global steps, then int8 payload + per-tile f32
+sideband with per-shard error feedback (~0.25x wire bytes).  Sync /
+single-device runs auto-fall back to ``none``:
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
+        --reduced --fused --mesh 4x1 --host-devices 4 --steps 8 \
+        --compress int8 --compress-warmup 2
 """
 from __future__ import annotations
 
@@ -67,7 +78,8 @@ from repro.data import make_lm_stream
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
 from repro.launch.steps import (ARCH_OPTIMIZER, fused_state_specs,
                                 init_fused_train_state, init_train_state,
-                                jit_fused_train_step, make_train_step)
+                                init_wire_state, jit_fused_train_step,
+                                make_train_step, make_wire_psum_steps)
 from repro.models import transformer as T
 from repro.optim import get_optimizer
 
@@ -120,6 +132,62 @@ def run_embedding_smoke(args) -> None:
     assert jnp.isfinite(loss), "embedding smoke diverged"
 
 
+def run_wire_train(args, cfg, mesh, gba, stream, params,
+                   scheme: str) -> None:
+    """Worker-parallel fused-psum loop with the quantized wire: every
+    device along ``data`` is its own PS worker AND shard
+    (core.gba_shard_map), gradients route worker->shard per layer group,
+    and past ``--compress-warmup`` global steps the routing payload is
+    int8 (+ per-tile f32 sideband) with per-shard error feedback.  The
+    warmup->compressed switch is a re-jit: two separate jitted programs,
+    each with exactly one wire dtype (auditor rule GBA-COLL-005)."""
+    from repro.core.compression import CompressionPolicy
+    m = mesh.shape["data"]
+    layout, state = init_fused_train_state(params, gba, mesh=mesh,
+                                           layer_groups=True)
+    pol = CompressionPolicy(scheme=scheme,
+                            warmup_steps=args.compress_warmup)
+    warm_step, comp_step = make_wire_psum_steps(
+        cfg, gba, layout, mesh, compress=pol, lr=args.lr)
+    wire = init_wire_state(layout, pol, mesh)
+    param_flat = jnp.asarray(layout.ravel(params))
+    accum = state["accum"]
+    f32_bytes = layout.padded_total * 4
+    print(f"quantized wire ({scheme}): {m} workers x {layout.num_groups} "
+          f"groups; route "
+          f"{pol.wire_bytes(layout) / 1e6:.2f}MB/worker/step vs "
+          f"{f32_bytes / 1e6:.2f}MB f32 "
+          f"(ratio {pol.compression_ratio(layout):.3f}); "
+          f"warmup {pol.warmup_steps} steps f32, then "
+          f"{pol.wire_dtype()} payload + "
+          f"{pol.sideband_floats_per_tile()} f32 sideband(s)/tile; "
+          f"wire state: {', '.join(pol.state_names())}")
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        b = stream.batch(i)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "labels": jnp.asarray(b["labels"])}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (args.batch, cfg.num_image_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_frames, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        tokens = jnp.full((m,), i, jnp.int32)
+        gstep = jnp.asarray(i, jnp.int32)
+        warm = i < pol.warmup_steps
+        fn = warm_step if warm else comp_step
+        param_flat, accum, loss, wire = fn(
+            param_flat, accum, batch, tokens, gstep, wire)
+        if i % 5 == 0 or i == args.steps - 1 or i == pol.warmup_steps:
+            phase = "warmup/f32" if warm else f"{scheme} wire"
+            print(f"step {i:4d}  loss {float(loss):.4f}  [{phase}]  "
+                  f"{(i + 1) * args.batch * args.seq / (time.perf_counter() - t0):,.0f} tok/s")
+    assert jnp.isfinite(loss), "quantized-wire run diverged"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS,
@@ -152,6 +220,19 @@ def main() -> None:
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N host-platform devices before jax device "
                          "init (CPU test path for --mesh)")
+    ap.add_argument("--compress", choices=("none", "int8", "onebit"),
+                    default="none",
+                    help="quantize the gradient routing wire of the "
+                         "worker-parallel fused-psum step (implies that "
+                         "step; needs --fused and a multi-device data "
+                         "axis).  int8 = per-tile min-max with error "
+                         "feedback; onebit = sign-of-momentum after "
+                         "--compress-warmup full-precision global steps. "
+                         "Sync / single-device runs auto-fall back to "
+                         "none — there is no wire to compress")
+    ap.add_argument("--compress-warmup", type=int, default=2,
+                    help="full-precision warmup global steps before the "
+                         "lossy wire engages (re-jit at the boundary)")
     ap.add_argument("--vocab", type=int, default=0,
                     help="run the streamed-embedding sparse smoke at this "
                          "hash capacity (e.g. 1000000) instead of an LM "
@@ -210,6 +291,20 @@ def main() -> None:
     multi_dev = mesh.shape["data"] > 1
     layer_groups = (args.layer_groups == "on"
                     or (args.layer_groups == "auto" and fused and multi_dev))
+    compress = args.compress
+    if compress != "none" and not (fused and multi_dev):
+        # sync / single-device mode has no worker->shard wire to quantize
+        print(f"--compress {compress}: needs --fused and a multi-device "
+              f"data axis (worker-parallel fused-psum wire); this "
+              f"sync/single-device run falls back to none")
+        compress = "none"
+    if compress != "none":
+        if args.batch % mesh.shape["data"]:
+            ap.error(f"--compress needs --batch divisible by the data "
+                     f"axis ({mesh.shape['data']})")
+        with mesh:
+            run_wire_train(args, cfg, mesh, gba, stream, params, compress)
+        return
     with mesh:
         if fused:
             layout, state = init_fused_train_state(

@@ -135,6 +135,27 @@ def test_coll_004_sync_clean_and_trips_on_wrong_leaves():
         JA.check_sync_psum_schedule(jfused, leaf_shapes, "t"))
 
 
+def test_coll_005_clean_and_trips_on_f32_leak():
+    """The compressed trace checks clean against its own policy; the
+    UNCOMPRESSED (f32-wire) trace checked as past-warmup trips
+    GBA-COLL-005 exactly — full-precision leakage after warmup is a
+    finding, and the warm check accepts the same f32 trace."""
+    from repro.core.compression import CompressionPolicy
+    _, layout = tiny_layout()
+    batch = {"x": SDS((M * 4,), jnp.float32)}
+    pol = CompressionPolicy(scheme="int8", warmup_steps=1)
+    jc = AU.trace_fused_step(layout, M, AU.probe_loss, batch,
+                             compress=pol)
+    assert JA.check_wire_dtypes(jc, layout, M, pol, "t") == []
+    # known-bad: f32 routing where the policy says the wire is int8
+    _, jleak = fused_trace()
+    fs = JA.check_wire_dtypes(jleak, layout, M, pol, "t")
+    assert rules_of(fs) == ["GBA-COLL-005"]
+    # ... but the SAME f32 trace is exactly what warmup must look like
+    assert JA.check_wire_dtypes(jleak, layout, M, pol, "t",
+                                warm=True) == []
+
+
 # ---------------------------------------------------------------------------
 # dtype lints (GBA-DTYPE-*)
 # ---------------------------------------------------------------------------

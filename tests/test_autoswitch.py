@@ -33,6 +33,41 @@ def test_empty_window_keeps_mode():
     assert c.decide(np.array([])) == "gba"
 
 
+def test_summary_empty_window_regression():
+    """summary() is safe before any decision AND after an empty-window
+    decision: last_speedup is NaN (not a crash on history[-1] of
+    nothing), decisions counts every decide() call, and mode is
+    whatever decide() kept."""
+    c = AutoSwitchController()
+    s0 = c.summary()
+    assert s0["mode"] == "sync"
+    assert np.isnan(s0["last_speedup"])
+    assert s0["decisions"] == 0
+    assert "bytes_on_wire" not in s0       # no wire map plumbed
+    c.decide([])                           # empty window: no signal
+    s1 = c.summary()
+    assert s1["mode"] == "sync"            # kept, not flipped
+    assert np.isnan(s1["last_speedup"])
+    assert s1["decisions"] == 1
+
+
+def test_summary_bytes_on_wire_plumbing():
+    """wire_bytes_per_step is telemetry plumbing only: summary() exposes
+    the current mode's bytes_on_wire and the full map, and the switching
+    decisions are identical with or without it."""
+    wire = {"sync": 4.0 * (1 << 20), "gba": 0.251 * 4.0 * (1 << 20)}
+    c = AutoSwitchController(wire_bytes_per_step=wire)
+    plain = AutoSwitchController()
+    assert c.summary()["bytes_on_wire"] == wire["sync"]
+    rates = np.array([100.0] * 15 + [10.0])
+    assert c.decide(rates) == plain.decide(rates) == "gba"
+    s = c.summary()
+    assert s["bytes_on_wire"] == wire["gba"]
+    assert s["wire_bytes_per_step"] == wire
+    assert s["decisions"] == 1 and s["last_speedup"] > 1.5
+    assert "bytes_on_wire" not in plain.summary()
+
+
 def test_history_stays_bounded():
     """history must not grow without bound on long runs: capped at
     max_history, keeping the most recent entries."""
