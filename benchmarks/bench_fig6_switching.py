@@ -8,9 +8,22 @@ AUC on the next day after each training day.  Claims:
   C2a  GBA's first-day AUC after switching ~= sync (no sudden drop);
   C2b  GBA >= the semi-sync baselines on average;
   C2c  pure async with the sync hyper-parameter set collapses.
+
+:func:`run_switching` is the GATED trajectory (suite ``switching`` in
+``benchmarks.run``): it spawns ``repro.launch.switch_driver`` as a
+4-host-device subprocess (the bench process's jax is already initialized
+single-device, so the mesh must live in a child) and reports the
+end-to-end switching rows — strained-cluster ``speedup_vs_sync`` (floor:
+may not shrink), ``switch_count`` and ``time_to_switch_steps`` (monotone:
+may not grow).  The sim clock is seeded-rng deterministic and independent
+of jitted-step wall time, so these columns gate exactly.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -25,6 +38,52 @@ from repro.sim.cluster import ClusterSpec
 
 CFG = CRITEO_DEEPFM
 MODES = ["gba", "hop_bs", "bsp", "hop_bw", "async", "async_setS"]
+
+# fixed regardless of --fast: the gated columns must match the committed
+# baseline bit-for-bit, and the run is already bench-cheap (tiny demo MLP)
+SWITCH_WORKERS = 4
+SWITCH_BATCHES = 240
+
+
+def _driver_json(plan: str) -> dict:
+    """One ``switch_driver`` subprocess run (auto + forced-sync legs on
+    the same plan); its last stdout line is the JSON result."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)          # the driver sets its own
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.switch_driver",
+         "--host-devices", str(SWITCH_WORKERS),
+         "--workers", str(SWITCH_WORKERS),
+         "--batches", str(SWITCH_BATCHES), "--plan", plan,
+         "--mode", "auto", "--compare-sync", "--json"],
+        capture_output=True, text=True, timeout=900, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"switch_driver --plan {plan} failed:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run_switching() -> list[str]:
+    """End-to-end switching trajectory rows (suite ``switching``)."""
+    rows = []
+    for plan in ("strained", "quiet"):
+        t0 = time.perf_counter()
+        out = _driver_json(plan)
+        us = (time.perf_counter() - t0) * 1e6
+        derived = (f"switch_count={out['switch_count']};"
+                   f"deadlocked={out['deadlocked']};"
+                   f"crashes={out['crashes']};rejoins={out['rejoins']};"
+                   f"sync_timeouts={out['sync_timeouts']};"
+                   f"lost_tokens={out['lost_batches']};"
+                   f"swaps_verified={out['swaps_verified']};"
+                   f"speedup_vs_sync={out['speedup_vs_sync']:.4f}")
+        if out["time_to_first_switch_steps"] is not None:
+            derived += (f";time_to_switch_steps="
+                        f"{out['time_to_first_switch_steps']}")
+        rows.append(csv_row(f"fig6.switch_driver.{plan}", us, derived))
+    return rows
 
 
 def run(base_days: int = 8, eval_days: int = 3) -> list[str]:

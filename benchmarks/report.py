@@ -22,7 +22,8 @@ import json
 # this module stays importable without jax
 COLUMNS = ("vmem_bytes", "launch_ratio", "buffer_ratio",
            "peak_gather_bytes", "bytes_on_wire", "compression_ratio",
-           "audit_wire_dtype")
+           "audit_wire_dtype", "switch_count", "time_to_switch_steps",
+           "speedup_vs_sync")
 
 
 def _fmt(v) -> str:
@@ -77,7 +78,9 @@ def render(baseline: list[dict], fresh: list[dict]) -> str:
               "bytes_on_wire/compression_ratio may not grow, launch_ratio "
               "may not shrink, audit_wire_dtype must equal the baseline "
               "(GBA-COLL-005 verdict: the policy dtype when the compressed "
-              "trace is leak-free)."]
+              "trace is leak-free), and on the end-to-end switching rows "
+              "switch_count / time_to_switch_steps may not grow while the "
+              "strained-cluster speedup_vs_sync may not shrink."]
     return "\n".join(lines)
 
 

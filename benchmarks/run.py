@@ -13,8 +13,11 @@ baseline JSON (default ``BENCH_kernels.json``) and exits non-zero on a
 >5x ``us_per_call`` regression (interpret-mode wall time is load noise;
 only catastrophic algorithmic blowups should trip it), any growth of a
 ``vmem_bytes``, ``buffer_ratio``, ``peak_gather_bytes``,
-``gather_ratio``, ``bytes_on_wire`` or ``compression_ratio`` column, any
-shrink of a ``launch_ratio`` column, any change at all of an ``audit_*``
+``gather_ratio``, ``bytes_on_wire``, ``compression_ratio``,
+``switch_count`` or ``time_to_switch_steps`` column, any shrink of a
+``launch_ratio`` or ``speedup_vs_sync`` column (the end-to-end switching
+trajectory rows from ``bench_fig6_switching.run_switching`` — sim-clock
+deterministic, so they gate exactly), any change at all of an ``audit_*``
 column (auditor-derived collective census / launch-meta VMEM /
 quantized-wire dtype verdict), a
 baseline row that disappeared, or a fresh row missing from the baseline
@@ -30,7 +33,7 @@ import sys
 import time
 import traceback
 
-JSON_SUITES = ("kernels", "roofline")
+JSON_SUITES = ("kernels", "roofline", "switching")
 # --check: max allowed us_per_call growth.  Interpret-mode wall time
 # swings ~4x with container/CI load (the bench docstrings call it noise;
 # the derived columns are the claims), so this only catches catastrophic
@@ -38,9 +41,16 @@ JSON_SUITES = ("kernels", "roofline")
 # columns below are gated exactly.
 US_REGRESSION = 5.0
 MONOTONE_COLS = ("vmem_bytes", "buffer_ratio", "peak_gather_bytes",
-                 "gather_ratio", "bytes_on_wire",
-                 "compression_ratio")            # --check: no growth at all
-FLOOR_COLS = ("launch_ratio",)                   # --check: no shrink at all
+                 "gather_ratio", "bytes_on_wire", "compression_ratio",
+                 # end-to-end switching trajectory: more mode flaps or a
+                 # later first switch on the same fault plan = regression
+                 "switch_count",
+                 "time_to_switch_steps")         # --check: no growth at all
+FLOOR_COLS = ("launch_ratio",
+              # strained-cluster auto vs forced-sync, sim clock: the
+              # Fig. 6 speedup claim may not shrink (deterministic —
+              # seeded-rng timing, independent of jitted wall time)
+              "speedup_vs_sync")                 # --check: no shrink at all
 # --check: must EQUAL the baseline.  Auditor-derived structural columns
 # (collective census counts, launch-meta VMEM): any drift means the
 # collective schedule or kernel geometry changed, which must be a
@@ -192,6 +202,9 @@ def main() -> None:
             base_days=3 if args.fast else 6)),
         ("kernels", lambda: bench_kernels.run(all_rows=args.all)),
         ("roofline", roofline.run),
+        # gated switching trajectory: fixed size regardless of --fast
+        # (the gate compares the committed baseline exactly)
+        ("switching", bench_fig6_switching.run_switching),
     ]
     selected = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

@@ -2,7 +2,8 @@
 # Tier-1 gate + kernel perf smoke: what a CI runner executes on every PR.
 #
 #   scripts/ci.sh              # fast lane (every PR/push)
-#   CI_SLOW=1 scripts/ci.sh    # + slow-marked shard_map/replay tests
+#   CI_SLOW=1 scripts/ci.sh    # + slow-marked shard_map/replay tests and
+#                              # the chaos/switching subprocess tests
 #                              # (nightly lane)
 #
 # CI
@@ -71,5 +72,9 @@ echo "== static audit (hot-path rules, all archs) =="
 python -m repro.analysis --check
 
 echo "== kernel perf gate =="
-python -m benchmarks.run --only kernels --fast --check --summary \
+# kernels (interpret-mode micro-benches) + switching (the end-to-end
+# sync<->async trajectory: switch_count / time_to_switch_steps monotone,
+# strained speedup_vs_sync floored — bench_fig6_switching.run_switching
+# spawns the 4-host-device switch_driver subprocess)
+python -m benchmarks.run --only kernels,switching --fast --check --summary \
     --json BENCH_kernels.json

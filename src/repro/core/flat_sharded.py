@@ -253,19 +253,25 @@ class ShardedFlatLayout:
             parts.append(jnp.zeros((tail,), jnp.float32))
         return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
 
-    def unravel_group(self, g: int, group_flat: jax.Array) -> list:
-        """Contiguous group flat -> that group's leaves (treedef order)."""
+    def unravel_group(self, g: int, group_flat: jax.Array,
+                      dtype=None) -> list:
+        """Contiguous group flat -> that group's leaves (treedef order).
+        ``dtype`` overrides the per-leaf cast — e.g. ``jnp.float32`` when
+        unraveling an OPTIMIZER vector (Adagrad accum) whose leaves must
+        stay f32 even for a bf16-param model."""
         return [
             group_flat[self.offsets[j]:self.offsets[j] + self.sizes[j]]
-            .reshape(self.shapes[j]).astype(self.dtypes[j])
+            .reshape(self.shapes[j])
+            .astype(self.dtypes[j] if dtype is None else dtype)
             for j in self.group_leaves(g)]
 
-    def unravel_groups(self, group_flats: list[jax.Array]) -> Params:
+    def unravel_groups(self, group_flats: list[jax.Array],
+                       dtype=None) -> Params:
         """Per-group contiguous flats -> the full pytree."""
         leaves: list = [None] * len(self.sizes)
         for g, gflat in enumerate(group_flats):
             for j, leaf in zip(self.group_leaves(g),
-                               self.unravel_group(g, gflat)):
+                               self.unravel_group(g, gflat, dtype)):
                 leaves[j] = leaf
         return jax.tree.unflatten(self.treedef, leaves)
 
@@ -280,12 +286,12 @@ class ShardedFlatLayout:
             return gfs[0].reshape(-1)
         return jnp.concatenate(gfs, axis=1).reshape(-1)
 
-    def unravel(self, flat: jax.Array) -> Params:
+    def unravel(self, flat: jax.Array, dtype=None) -> Params:
         rows = flat.reshape(self.num_shards, self.shard_size)
         gfs = [rows[:, lo:lo + gsn].reshape(-1)
                for lo, gsn in zip(self.group_local_offsets,
                                   self.group_shard_sizes)]
-        return self.unravel_groups(gfs)
+        return self.unravel_groups(gfs, dtype)
 
     # -- shard geometry -----------------------------------------------------
     def shard_bounds(self, s: int) -> tuple[int, int]:

@@ -91,6 +91,17 @@ def _loss_from_batch(params, cfg: ModelConfig, batch: dict) -> jax.Array:
                      memory=memory)
 
 
+def make_loss_fn(cfg: ModelConfig):
+    """Standalone ``(params, batch) -> scalar loss`` closure over ``cfg``
+    — the signature the shard_map step builders
+    (:func:`repro.core.gba_shard_map.make_gba_psum_step` /
+    ``make_gba_fused_psum_step``) and the switching harness
+    (:class:`repro.launch.switch_driver.SwitchDriver`) consume."""
+    def loss_fn(params, batch):
+        return _loss_from_batch(params, cfg, batch)
+    return loss_fn
+
+
 def init_train_state(params: Any, optimizer: Optimizer,
                      acc_dtype=jnp.float32) -> dict:
     return {

@@ -1,0 +1,955 @@
+"""End-to-end tuning-free sync<->async switching on the REAL compiled steps.
+
+The paper's headline claim (Fig. 6): because GBA holds the global batch
+and the token-control rule needs no retuning, a job can switch between
+synchronous AR training and asynchronous GBA training mid-run, following
+the cluster status.  ``core.autoswitch`` decides *when*; this module is
+the harness that actually *does* it:
+
+* **sync mode** runs :func:`repro.core.gba_shard_map.make_gba_psum_step`
+  — the pytree all-reduce program with Adagrad (``sync_impl="psum"``) —
+  or the uncompressed fused-psum step with all-fresh tokens
+  (``sync_impl="fused"``, the tuning-free degenerate form the parity
+  tests use as a bit-exactness oracle);
+* **async mode** runs the token-controlled layer-grouped fused-psum step
+  (:func:`~repro.core.gba_shard_map.make_gba_fused_psum_step`),
+  optionally with the quantized wire (warmup/compressed re-jit pair);
+* a sim-clock event loop (same timing vocabulary as ``sim.cluster``)
+  drives per-worker pulls/pushes under a :class:`repro.sim.faults.FaultPlan`
+  — straggler windows, transient crashes with token loss and timed
+  recovery (Alg. 1), telemetry-scrape dropouts, async apply failures —
+  and feeds per-worker completion rates to an
+  :class:`~repro.core.autoswitch.AutoSwitchController`.
+
+Switch protocol (see launch/README.md for the operator view):
+
+1. **drain**: in-flight worker batches are cancelled; their tokens are
+   discarded (counted in ``SwitchResult.drained``) and the batches
+   requeued so no data is lost across the swap;
+2. **state carryover**: the canonical training state is the layout's
+   flat (param, accum) pair.  ``sync_impl="fused"`` shares it between
+   modes (zero-copy swap); ``sync_impl="psum"`` converts pytree
+   params + Adagrad accum <-> flat vectors via :func:`tree_to_flat` /
+   :func:`flat_to_tree`, bit-exactly (padding positions carry param 0 /
+   accum ``initial_accum``, matching an unswitched fused run, where
+   padding gradient is identically zero).  With ``verify_swap`` every
+   swap round-trips the conversion and raises on any bit difference;
+3. **token reissue**: sync mode stamps every participating slot with the
+   current global step (fresh tokens, weight 1); async dispatches stamp
+   the pull-time step.  A worker excluded from the sync barrier (dead,
+   or timed out past the retry budget) contributes a **tombstone** slot:
+   token ``gstep - iota - 1``, which Eq. (1) decays to EXACTLY zero —
+   the barrier never waits on it and bit-exactness is preserved;
+4. **compression warmup re-entry**: each entry into async mode zeroes
+   the wire state and restarts the warmup counter, so the
+   warmup->compressed re-jit boundary is re-entered safely (two
+   pre-built jitted programs; no mid-run retrace).
+
+Graceful degradation: per-worker pull timeouts with bounded
+retry+backoff (``push_timeout``/``max_retries``/``backoff``); a crashed
+worker is discovered by one timeout burst, then excluded from the
+barrier until its recovery time instead of hanging sync mode; repeated
+async apply failures (``breaker_threshold`` consecutive) trip a
+fallback-to-sync circuit breaker that also restarts the controller's
+dwell window.
+
+Run it directly for the Fig. 6 trajectory (used by
+``benchmarks.bench_fig6_switching``):
+
+    PYTHONPATH=src python -m repro.launch.switch_driver \
+        --host-devices 4 --workers 4 --batches 240 --plan strained \
+        --compare-sync --json
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import os
+import sys
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+# --host-devices must land in XLA_FLAGS before jax initializes the
+# backend (same argv-peek idiom as launch.train); only the __main__ path
+# does this — library imports never touch jax device state.
+if __name__ == "__main__":                        # pragma: no cover
+    for _i, _a in enumerate(sys.argv):
+        _n = None
+        if _a == "--host-devices" and _i + 1 < len(sys.argv):
+            _n = sys.argv[_i + 1]
+        elif _a.startswith("--host-devices="):
+            _n = _a.split("=", 1)[1]
+        if _n and _n.isdigit():
+            os.environ["XLA_FLAGS"] = (
+                f"{os.environ.get('XLA_FLAGS', '')} "
+                f"--xla_force_host_platform_device_count={_n}").strip()
+            break
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.autoswitch import AutoSwitchController
+from repro.core.flat_sharded import ShardedFlatLayout
+from repro.core.gba_shard_map import (make_gba_fused_psum_step,
+                                      make_gba_psum_step)
+from repro.optim import get_optimizer
+from repro.sim.cluster import ClusterSpec
+from repro.sim.faults import FaultInjector, FaultPlan
+
+
+# ---------------------------------------------------------------------------
+# state carryover: pytree params/Adagrad accum <-> canonical flat vectors
+# ---------------------------------------------------------------------------
+
+def pad_mask(layout: ShardedFlatLayout) -> jax.Array:
+    """(padded_total,) f32: 1.0 where a real parameter element lives, 0.0
+    in tile/shard padding — the positions ``layout.ravel`` zero-fills."""
+    ones = jax.tree.unflatten(
+        layout.treedef,
+        [jnp.ones(s, jnp.float32) for s in layout.shapes])
+    return layout.ravel(ones)
+
+
+def tree_to_flat(layout: ShardedFlatLayout, params: Any, accum_tree: Any,
+                 *, initial_accum: float = 0.1
+                 ) -> tuple[jax.Array, jax.Array]:
+    """(params pytree, Adagrad accum pytree) -> flat (param, accum).
+
+    Padding positions get param 0 and accum ``initial_accum`` — exactly
+    the state an unswitched fused run carries there (padding gradient is
+    identically zero, so fused Adagrad never moves those elements off
+    their init), which is what makes a sync->async->sync round trip
+    bit-exact against a run that never switched."""
+    pf = layout.ravel(params)
+    af = layout.ravel(accum_tree) \
+        + (1.0 - pad_mask(layout)) * initial_accum
+    return pf, af
+
+
+def flat_to_tree(layout: ShardedFlatLayout, param_flat: jax.Array,
+                 accum_flat: jax.Array) -> tuple[Any, dict]:
+    """Flat (param, accum) -> (params pytree, Adagrad opt_state).  The
+    accum leaves stay f32 (the optimizer's dtype) even for a bf16-param
+    model — ``layout.unravel`` would otherwise cast them to the PARAM
+    leaf dtypes."""
+    return (layout.unravel(param_flat),
+            {"accum": layout.unravel(accum_flat, jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# configuration / results
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SwitchConfig:
+    """Knobs of the switching harness (see launch/README.md).
+
+    ``push_timeout`` / ``backoff`` default to ``None`` = auto: 8x / 2x
+    the healthy batch duration (``local_batch / spec.base_speed``), so a
+    4x straggler never times out but a dead worker is discovered within
+    one bounded retry burst."""
+    local_batch: int = 256
+    iota: int = 4               # Eq. (1) staleness tolerance
+    lr: float = 0.05
+    eps: float = 1e-10
+    initial_accum: float = 0.1  # Adagrad init (matches the fused kernel)
+    decide_every: int = 4       # global steps per telemetry decision
+    min_dwell: int = 2          # controller cooldown, in decisions
+    push_timeout: float | None = None   # sim-seconds per pull attempt
+    max_retries: int = 2        # extra pull attempts before exclusion
+    backoff: float | None = None        # extra wait between attempts
+    breaker_threshold: int = 3  # consecutive async apply failures ->
+                                # forced fallback to sync
+    sync_impl: str = "psum"     # "psum" | "fused" (see module docstring)
+    verify_swap: bool = True    # bit-exact round-trip check at each swap
+
+    def __post_init__(self):
+        if self.sync_impl not in ("psum", "fused"):
+            raise ValueError(f"sync_impl must be 'psum' or 'fused', "
+                             f"got {self.sync_impl!r}")
+        if self.local_batch < 1:
+            raise ValueError(f"local_batch must be >= 1, "
+                             f"got {self.local_batch}")
+        if self.decide_every < 1:
+            raise ValueError(f"decide_every must be >= 1, "
+                             f"got {self.decide_every}")
+        if self.breaker_threshold < 1:
+            raise ValueError(f"breaker_threshold must be >= 1, "
+                             f"got {self.breaker_threshold}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+
+
+@dataclass(frozen=True)
+class GlobalStep:
+    """One replayable global step: per-slot tokens and batch indices
+    (batch index < 0 = tombstone slot: zero batch, weight-0 token)."""
+    tokens: tuple[int, ...]
+    batches: tuple[int, ...]
+
+
+@dataclass
+class SwitchResult:
+    """What one driver run measured.  ``param_flat`` / ``accum_flat`` are
+    the final CANONICAL flat state (converted from the pytree if the run
+    ended in psum-sync mode), so two runs compare bit-for-bit regardless
+    of which mode they ended in."""
+    wall_time: float = 0.0      # sim-clock seconds
+    samples: int = 0            # aggregated (weight-1) samples
+    num_global_steps: int = 0
+    switch_count: int = 0
+    time_to_first_switch_steps: int | None = None
+    mode_timeline: list = field(default_factory=list)  # (gstep, t, mode)
+    mode_steps: dict = field(default_factory=dict)     # mode -> gsteps
+    mode_time: dict = field(default_factory=dict)      # mode -> sim secs
+    losses: list = field(default_factory=list)
+    crashes: int = 0
+    rejoins: int = 0
+    timeouts: int = 0
+    lost_batches: int = 0       # tokens lost to crashes (Alg. 1)
+    dropped_batches: int = 0    # Eq. (1) weight-0 slots (real, stale)
+    tombstones: int = 0         # synthetic weight-0 slots (exclusions)
+    drained: int = 0            # in-flight tokens discarded at swaps
+    stalled_barriers: int = 0   # sync rounds with zero live workers
+    apply_failures: int = 0
+    breaker_trips: int = 0
+    dropped_scrapes: int = 0
+    swaps_verified: int = 0
+    warm_steps: int = 0         # async steps run on the warmup program
+    param_flat: np.ndarray | None = None
+    accum_flat: np.ndarray | None = None
+    controller_summary: dict | None = None
+
+    @property
+    def qps(self) -> float:
+        return self.samples / self.wall_time if self.wall_time else 0.0
+
+    def to_json(self) -> dict:
+        def py(v):
+            if isinstance(v, (np.floating, np.integer)):
+                return v.item()
+            if isinstance(v, dict):
+                return {k: py(x) for k, x in v.items()}
+            if isinstance(v, (list, tuple)):
+                return [py(x) for x in v]
+            return v
+        out = {k: py(v) for k, v in self.__dict__.items()
+               if k not in ("param_flat", "accum_flat", "losses")}
+        out["qps"] = py(self.qps)
+        out["final_loss"] = self.losses[-1] if self.losses else None
+        return out
+
+
+class _RunState:
+    """Mutable per-run bookkeeping (mode, live training state, event
+    heap, telemetry window, counters that land in :class:`SwitchResult`)."""
+
+    def __init__(self, num_workers: int):
+        self.mode = "sync"
+        self.finished = False
+        # training state: exactly one representation is live at a time
+        self.params = None          # pytree (psum sync mode)
+        self.opt = None             # {"accum": pytree}
+        self.pf = None              # flat params (fused modes)
+        self.af = None              # flat accum
+        self.wire = None
+        self.warm_count = 0
+        # sim clock / data
+        self.t = 0.0
+        self.gstep = 0
+        self.inj = None             # set by run(); None in run_schedule
+        self.num_batches = 0
+        self.next_batch = 0
+        self.requeue: list[int] = []
+        self.heap: list = []        # async events
+        self.seq = itertools.count()
+        self.down: set[int] = set()
+        self.breaker = 0
+        # telemetry window
+        self.win_completions = np.zeros(num_workers)
+        self.win_busy = np.zeros(num_workers)
+        self.result = SwitchResult()
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+class SwitchDriver:
+    """Runs the real compiled sync/async steps under a fault plan with
+    live mode switching.  Programs are jitted once in the constructor;
+    :meth:`run` (event-driven sim) and :meth:`run_schedule` (fixed
+    schedule replay) can both be called repeatedly — e.g. once in
+    ``mode="auto"`` and once in ``mode="sync"`` on the same plan for a
+    like-for-like speedup — sharing the compiled steps."""
+
+    def __init__(self, mesh: Mesh, loss_fn: Callable, params: Any, *,
+                 spec: ClusterSpec, plan: FaultPlan,
+                 cfg: SwitchConfig = SwitchConfig(),
+                 batch_fn: Callable[[int], dict],
+                 compress=None, layout: ShardedFlatLayout | None = None,
+                 group_by=None, tile: int | None = None,
+                 axis: str = "data"):
+        self.mesh, self.axis, self.cfg = mesh, axis, cfg
+        self.m = mesh.shape[axis]
+        if spec.num_workers != self.m or plan.num_workers != self.m:
+            raise ValueError(
+                f"mesh axis {axis!r} has {self.m} devices; spec has "
+                f"{spec.num_workers} workers, plan has {plan.num_workers}")
+        self.spec, self.plan = spec, plan
+        self.loss_fn, self.batch_fn = loss_fn, batch_fn
+        self.compress = (compress if compress is not None
+                         and compress.stateful else None)
+        if layout is None:
+            from repro.kernels.gba_apply import BLOCK_N
+            layout = ShardedFlatLayout.from_params(
+                params, self.m, tile or BLOCK_N, group_by=group_by)
+        if layout.num_shards != self.m:
+            raise ValueError(
+                f"layout has {layout.num_shards} shards, mesh axis "
+                f"{axis!r} has {self.m} devices")
+        self.layout = layout
+        self._params0 = params
+        # resolved timeout/backoff (sim-seconds): a healthy pull costs
+        # compute + PS roundtrip, so auto must budget BOTH — a roundtrip
+        # that dominates a small local batch must not read as a timeout
+        base_dur = cfg.local_batch / spec.base_speed + spec.ps_roundtrip
+        self.push_timeout = (cfg.push_timeout if cfg.push_timeout
+                             is not None else 8.0 * base_dur)
+        self.backoff = (cfg.backoff if cfg.backoff is not None
+                        else 2.0 * base_dur)
+        # shardings
+        self._flat_shd = NamedSharding(mesh, P(axis))
+        self._repl_shd = NamedSharding(mesh, P())
+        self._pad_accum = np.asarray(
+            (1.0 - pad_mask(layout)) * cfg.initial_accum)
+        # compiled programs
+        self._fused_plain = jax.jit(make_gba_fused_psum_step(
+            mesh, loss_fn, layout, iota=cfg.iota, lr=cfg.lr, eps=cfg.eps,
+            axis=axis))
+        if self.compress is not None:
+            build = lambda warm: jax.jit(make_gba_fused_psum_step(
+                mesh, loss_fn, layout, iota=cfg.iota, lr=cfg.lr,
+                eps=cfg.eps, axis=axis, compress=self.compress, warm=warm))
+            self._fused_warm, self._fused_main = build(True), build(False)
+        if cfg.sync_impl == "psum":
+            self._opt = get_optimizer("adagrad", cfg.lr, eps=cfg.eps,
+                                      initial_accum=cfg.initial_accum)
+            self._sync_step = jax.jit(make_gba_psum_step(
+                mesh, loss_fn, self._opt, cfg.iota, axis=axis))
+        # zero batch template for tombstone slots (weight is exactly 0,
+        # so content never reaches the params; zeros keep losses finite)
+        tmpl = batch_fn(0)
+        lead = {jax.tree.leaves(tmpl)[0].shape[0]}
+        if lead != {cfg.local_batch}:
+            raise ValueError(
+                f"batch_fn leading dim {lead} != local_batch "
+                f"{cfg.local_batch}")
+        self._zeros_batch = jax.tree.map(np.zeros_like, tmpl)
+
+    # -- state management ---------------------------------------------------
+    def _fresh_state(self, mode: str) -> _RunState:
+        st = _RunState(self.m)
+        st.mode = mode
+        if mode == "sync" and self.cfg.sync_impl == "psum":
+            st.params = jax.device_put(self._params0, self._repl_shd)
+            st.opt = jax.device_put(self._opt.init(self._params0),
+                                    self._repl_shd)
+        else:
+            pf, af = tree_to_flat(self.layout, self._params0,
+                                  self._opt_init_accum(),
+                                  initial_accum=self.cfg.initial_accum)
+            st.pf = jax.device_put(pf, self._flat_shd)
+            st.af = jax.device_put(af, self._flat_shd)
+            if mode == "gba":
+                self._reset_wire(st)
+        return st
+
+    def _opt_init_accum(self):
+        return jax.tree.map(
+            lambda p: jnp.full(p.shape, self.cfg.initial_accum,
+                               jnp.float32), self._params0)
+
+    def _reset_wire(self, st: _RunState) -> None:
+        """Compression warmup re-entry: zero wire state, restart the
+        warmup counter — each entry into async mode replays the
+        warmup->compressed re-jit boundary safely."""
+        st.warm_count = 0
+        if self.compress is None:
+            st.wire = None
+            return
+        from repro.distributed import sharding as S
+        wire = self.compress.init_wire_state(self.layout, self.m)
+        specs = S.wire_state_specs(self.layout, self.mesh,
+                                   self.compress.scheme, self.axis)
+        st.wire = jax.device_put(wire, S.to_named(specs, self.mesh))
+
+    def _swap(self, st: _RunState, new_mode: str, controller=None) -> None:
+        """Execute the switch protocol: drain in-flight, convert state
+        (verified bit-exact when ``verify_swap``), reissue from the
+        requeue, re-enter compression warmup."""
+        if new_mode == st.mode:
+            return
+        r = st.result
+        if st.mode == "gba":
+            # drain: discard in-flight tokens, requeue their batches
+            for ev in st.heap:
+                if ev[2] == "push":
+                    st.requeue.append(ev[4])
+                    r.drained += 1
+            st.heap = []
+        if self.cfg.sync_impl == "psum":
+            if new_mode == "gba":       # pytree -> flat
+                pf, af = tree_to_flat(self.layout, st.params,
+                                      st.opt["accum"],
+                                      initial_accum=self.cfg.initial_accum)
+                if self.cfg.verify_swap:
+                    # flat -> tree must reproduce the source pytree
+                    # bit-for-bit (f32 holds every bf16 value exactly)
+                    p2, o2 = flat_to_tree(self.layout, pf, af)
+                    self._check_equal(st.params, p2, "params")
+                    self._check_equal(st.opt["accum"], o2["accum"],
+                                      "accum")
+                    r.swaps_verified += 1
+                st.pf = jax.device_put(pf, self._flat_shd)
+                st.af = jax.device_put(af, self._flat_shd)
+                st.params = st.opt = None
+            else:                       # flat -> pytree
+                params, opt = flat_to_tree(self.layout, st.pf, st.af)
+                if self.cfg.verify_swap:
+                    # tree -> flat must reproduce the source vectors.
+                    # The accum is exact always (f32 end to end, and the
+                    # pad positions are reconstructed by the same
+                    # formula).  Params are exact when the model is f32;
+                    # a bf16-param model inherently rounds to the model
+                    # dtype here — sync mode has no wider home for them
+                    # — so the param check only applies to f32 leaves.
+                    pf2, af2 = tree_to_flat(
+                        self.layout, params, opt["accum"],
+                        initial_accum=self.cfg.initial_accum)
+                    self._check_equal(st.af, af2, "accum")
+                    if all(d == jnp.float32 for d in self.layout.dtypes):
+                        self._check_equal(st.pf, pf2, "params")
+                    r.swaps_verified += 1
+                st.params = jax.device_put(params, self._repl_shd)
+                st.opt = jax.device_put(opt, self._repl_shd)
+                st.pf = st.af = None
+        # sync_impl="fused": flat state is shared — zero-copy swap
+        if new_mode == "gba":
+            self._reset_wire(st)
+            if st.inj is not None:      # event-driven run, not a replay
+                self._enter_async(st)
+        st.mode = new_mode
+        r.switch_count += 1
+        if r.time_to_first_switch_steps is None:
+            r.time_to_first_switch_steps = st.gstep
+        r.mode_timeline.append((st.gstep, st.t, new_mode))
+
+    @staticmethod
+    def _check_equal(a, b, what: str) -> None:
+        """Bit-exactness of the carryover: the round-tripped
+        representation must reproduce the source exactly."""
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            if not bool(jnp.array_equal(x, y, equal_nan=True)):
+                raise RuntimeError(f"switch carryover: {what} round-trip "
+                                   "is not bit-exact")
+
+    def _canonical_flat(self, st: _RunState
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        if st.pf is not None:
+            return (np.asarray(jax.device_get(st.pf)),
+                    np.asarray(jax.device_get(st.af)))
+        pf = self.layout.ravel(st.params)
+        af = self.layout.ravel(st.opt["accum"]) + self._pad_accum
+        return (np.asarray(jax.device_get(pf)),
+                np.asarray(jax.device_get(af)))
+
+    # -- compiled-step execution --------------------------------------------
+    def _put_batch(self, slot_batches: list) -> Any:
+        stacked = jax.tree.map(
+            lambda *xs: np.concatenate(xs, axis=0), *slot_batches)
+        return jax.device_put(stacked, self._flat_shd)
+
+    def _exec(self, st: _RunState, tokens: np.ndarray,
+              slot_batches: list) -> float:
+        """Run one global step of the CURRENT mode's compiled program.
+        Returns the loss; the caller decides whether to commit (async
+        apply failures leave state untouched)."""
+        batch = self._put_batch(slot_batches)
+        tok = jax.device_put(tokens.astype(np.int32), self._flat_shd)
+        gstep = jnp.asarray(st.gstep, jnp.int32)
+        if st.mode == "sync" and self.cfg.sync_impl == "psum":
+            params, opt, loss = self._sync_step(st.params, st.opt, batch,
+                                                tok, gstep)
+            loss = float(loss)
+            if math.isfinite(loss):
+                st.params, st.opt = params, opt
+            return loss
+        if st.mode == "sync" or self.compress is None:
+            pf, af, loss = self._fused_plain(st.pf, st.af, batch, tok,
+                                             gstep)
+            loss = float(loss)
+            if math.isfinite(loss):
+                st.pf, st.af = pf, af
+            return loss
+        warm = st.warm_count < self.compress.warmup_steps
+        fn = self._fused_warm if warm else self._fused_main
+        pf, af, loss, wire = fn(st.pf, st.af, batch, tok, gstep, st.wire)
+        loss = float(loss)
+        if math.isfinite(loss):
+            st.pf, st.af, st.wire = pf, af, wire
+            st.warm_count += 1
+            if warm:
+                st.result.warm_steps += 1
+        return loss
+
+    # -- batch bookkeeping --------------------------------------------------
+    def _take_batch(self, st: _RunState, num_batches: int) -> int | None:
+        if st.requeue:
+            return st.requeue.pop(0)
+        if st.next_batch < num_batches:
+            b = st.next_batch
+            st.next_batch += 1
+            return b
+        return None
+
+    def _has_batches(self, st: _RunState, num_batches: int) -> bool:
+        return bool(st.requeue) or st.next_batch < num_batches
+
+    # -- sync mode: one barrier round ---------------------------------------
+    def _sync_round(self, st: _RunState, inj: FaultInjector,
+                    num_batches: int) -> None:
+        r, cfg, m = st.result, self.cfg, self.m
+        t0 = st.t
+        # health check: recovered workers rejoin the barrier
+        for w in sorted(st.down):
+            if not inj.is_down(w, t0):
+                st.down.discard(w)
+                r.rejoins += 1
+        lat = np.zeros(m)
+        part: dict[int, int] = {}
+        requeue_back: list[int] = []
+        for w in range(m):
+            if w in st.down:
+                continue            # excluded: no probe, tombstone slot
+            b = self._take_batch(st, num_batches)
+            if b is None:
+                continue            # data exhausted: idle, tombstone
+            dur = inj.duration(w, t0, cfg.local_batch) \
+                + self.spec.ps_roundtrip
+            ev = inj.crash_between(w, t0, t0 + dur)
+            if ev is not None:
+                # the pull hangs: one bounded retry burst discovers the
+                # dead worker, then it is excluded until recovery —
+                # the barrier NEVER waits past the timeout budget
+                lat[w] = ((1 + cfg.max_retries) * self.push_timeout
+                          + cfg.max_retries * self.backoff)
+                r.timeouts += 1
+                r.crashes += 1
+                st.down.add(w)
+                requeue_back.append(b)
+                continue
+            if dur > self.push_timeout:
+                # alive but slower than the timeout: retry with backoff,
+                # give up (exclude this round only) past the budget
+                cost, ok = self.push_timeout, False
+                for _ in range(cfg.max_retries):
+                    cost += self.backoff
+                    d2 = inj.duration(w, t0 + cost, cfg.local_batch) \
+                        + self.spec.ps_roundtrip
+                    if d2 <= self.push_timeout:
+                        cost += d2
+                        ok = True
+                        break
+                    cost += self.push_timeout
+                lat[w] = cost
+                if ok:
+                    part[w] = b
+                else:
+                    r.timeouts += 1
+                    requeue_back.append(b)
+                continue
+            lat[w] = dur
+            part[w] = b
+        st.requeue.extend(requeue_back)
+        if not part:
+            if st.down and self._has_batches(st, num_batches):
+                # every live worker idle and data remains: jump the
+                # barrier clock to the earliest rejoin — no deadlock
+                r.stalled_barriers += 1
+                st.t = max(st.t, float(min(inj.down_until[w]
+                                           for w in st.down)))
+            else:
+                st.finished = True
+            return
+    # tombstone token: Eq. (1) weight is EXACTLY zero, so excluded
+    # slots change neither params nor loss, bit-for-bit
+        tokens = np.full(m, st.gstep - cfg.iota - 1, np.int64)
+        slot_batches: list = [self._zeros_batch] * m
+        for w, b in part.items():
+            tokens[w] = st.gstep
+            slot_batches[w] = self.batch_fn(b)
+        r.tombstones += m - len(part)
+        loss = self._exec(st, tokens, slot_batches)
+        step_time = float(lat.max()) + self.spec.allreduce_latency
+        st.t = t0 + step_time
+        if not math.isfinite(loss):
+            r.apply_failures += 1
+            return
+        st.gstep += 1
+        r.num_global_steps += 1
+        r.mode_steps["sync"] = r.mode_steps.get("sync", 0) + 1
+        r.samples += len(part) * cfg.local_batch
+        r.losses.append(loss)
+        for w in part:
+            st.win_completions[w] += 1
+            st.win_busy[w] += lat[w]
+
+    # -- async mode: dispatch / fill / apply --------------------------------
+    def _dispatch(self, st: _RunState, inj: FaultInjector, w: int,
+                  now: float, num_batches: int) -> None:
+        b = self._take_batch(st, num_batches)
+        if b is None:
+            return
+        dur = inj.duration(w, now, self.cfg.local_batch) \
+            + self.spec.ps_roundtrip
+        heapq.heappush(st.heap, (now + dur, next(st.seq), "push", w, b,
+                                 st.gstep, now))
+
+    def _enter_async(self, st: _RunState) -> None:
+        """(Re)build the event heap on entry into async mode: live
+        workers dispatch immediately, down workers get a rejoin event at
+        their recovery time."""
+        inj = st.inj
+        for w in range(self.m):
+            if w in st.down:
+                heapq.heappush(st.heap, (float(inj.down_until[w]),
+                                         next(st.seq), "rejoin", w, -1,
+                                         -1, 0.0))
+            else:
+                self._dispatch(st, inj, w, st.t, st.num_batches)
+
+    def _async_round(self, st: _RunState, inj: FaultInjector,
+                     num_batches: int, controller) -> None:
+        r, cfg, m = st.result, self.cfg, self.m
+        pending: list[tuple[int, int, int]] = []
+        guard = 0
+        while len(pending) < m:
+            guard += 1
+            if guard > 100_000:
+                raise RuntimeError("switch driver stalled: async buffer "
+                                   "fill made no progress")
+            if not st.heap:
+                break               # data exhausted: flush partial fill
+            time_, _, kind, w, b, tok, t_disp = heapq.heappop(st.heap)
+            if kind == "rejoin":
+                st.t = max(st.t, time_)
+                if w in st.down:
+                    st.down.discard(w)
+                    r.rejoins += 1
+                self._dispatch(st, inj, w, time_, num_batches)
+                continue
+            ev = inj.crash_between(w, t_disp, time_)
+            if ev is not None:
+                # Alg. 1: the worker's gradient AND its token disappear;
+                # it rejoins after recovery — the buffer keeps filling
+                # from the surviving workers, so no pull ever blocks on
+                # the crashed one
+                r.crashes += 1
+                r.lost_batches += 1
+                st.down.add(w)
+                st.t = max(st.t, ev.at)
+                heapq.heappush(st.heap, (float(inj.down_until[w]),
+                                         next(st.seq), "rejoin", w, -1,
+                                         -1, 0.0))
+                continue
+            st.t = max(st.t, time_)
+            pending.append((w, b, tok))
+            st.win_completions[w] += 1
+            st.win_busy[w] += time_ - t_disp
+            self._dispatch(st, inj, w, time_, num_batches)
+        if not pending:
+            st.finished = True
+            return
+        gstep = st.gstep
+        tokens = np.full(m, gstep - cfg.iota - 1, np.int64)
+        slot_batches: list = [self._zeros_batch] * m
+        for i, (w, b, tok) in enumerate(pending):
+            tokens[i] = tok
+            slot_batches[i] = self.batch_fn(b)
+        r.tombstones += m - len(pending)
+        if inj.apply_fails(gstep):
+            # PS write dropped: gradients lost, params NOT committed
+            r.apply_failures += 1
+            self._breaker_tick(st, controller)
+            return
+        loss = self._exec(st, tokens, slot_batches)
+        if not math.isfinite(loss):
+            r.apply_failures += 1
+            self._breaker_tick(st, controller)
+            return
+        st.breaker = 0
+        kept = sum(1 for i in range(len(pending))
+                   if gstep - tokens[i] <= cfg.iota)
+        r.dropped_batches += len(pending) - kept
+        r.samples += kept * cfg.local_batch
+        st.gstep += 1
+        r.num_global_steps += 1
+        r.mode_steps["gba"] = r.mode_steps.get("gba", 0) + 1
+        r.losses.append(loss)
+
+    def _breaker_tick(self, st: _RunState, controller) -> None:
+        """Consecutive async apply failures trip the fallback-to-sync
+        circuit breaker; forcing the controller restarts its dwell
+        window so the next decisions cannot flip straight back."""
+        st.breaker += 1
+        if st.breaker >= self.cfg.breaker_threshold and st.mode == "gba":
+            st.result.breaker_trips += 1
+            st.breaker = 0
+            if controller is not None:
+                controller.force("sync")
+            self._swap(st, "sync", controller)
+
+    # -- telemetry ----------------------------------------------------------
+    def _window_rates(self, st: _RunState) -> np.ndarray:
+        """Per-worker samples/s over the window, from BUSY time (compute
+        only, not barrier wait) so sync mode still exposes per-worker
+        capability; a worker with no completions reads exactly 0 — the
+        controller's dead-worker marker."""
+        rates = np.zeros(self.m)
+        mask = st.win_busy > 0
+        rates[mask] = (st.win_completions[mask] * self.cfg.local_batch
+                       / st.win_busy[mask])
+        return rates
+
+    # -- entry points -------------------------------------------------------
+    def run(self, num_batches: int, *, mode: str = "auto",
+            controller: AutoSwitchController | None = None,
+            mode_schedule: Callable[[int], str] | None = None,
+            seed: int = 0) -> SwitchResult:
+        """Event-driven run over ``num_batches`` local batches.
+
+        ``mode="auto"`` lets the controller decide every
+        ``decide_every`` global steps from live telemetry;
+        ``mode="sync"`` / ``mode="gba"`` force one mode (the circuit
+        breaker can still force sync); ``mode_schedule`` (gstep ->
+        mode) overrides both — the forced-swap path the parity tests
+        drive."""
+        if mode not in ("auto", "sync", "gba"):
+            raise ValueError(f"unknown mode {mode!r}")
+        inj = FaultInjector(self.plan, self.spec, seed)
+        if mode == "auto" and controller is None and mode_schedule is None:
+            controller = AutoSwitchController(min_dwell=self.cfg.min_dwell)
+        if mode != "auto":
+            controller = None
+        start = (mode_schedule(0) if mode_schedule is not None
+                 else mode if mode != "auto" else "sync")
+        st = self._fresh_state(start)
+        st.mode = start
+        st.inj = inj
+        st.num_batches = num_batches
+        if start == "gba":
+            st.heap = []
+            self._enter_async(st)
+        last_decide = -1
+        rounds = 0
+        while not st.finished:
+            rounds += 1
+            if rounds > 1000 + 100 * num_batches:
+                raise RuntimeError("switch driver stalled: no progress "
+                                   f"after {rounds} rounds")
+            pre_mode, pre_t = st.mode, st.t
+            if st.mode == "sync":
+                self._sync_round(st, inj, num_batches)
+            else:
+                self._async_round(st, inj, num_batches, controller)
+            st.result.mode_time[pre_mode] = (
+                st.result.mode_time.get(pre_mode, 0.0) + st.t - pre_t)
+            if st.finished:
+                break
+            if mode_schedule is not None:
+                want = mode_schedule(st.gstep)
+                if want != st.mode:
+                    self._swap(st, want)
+            elif (controller is not None and st.gstep > 0
+                    and st.gstep % self.cfg.decide_every == 0
+                    and st.gstep != last_decide):
+                last_decide = st.gstep
+                rates = inj.scrape(st.t, self._window_rates(st))
+                decision = controller.decide(
+                    [] if rates is None else rates)
+                st.win_completions[:] = 0.0
+                st.win_busy[:] = 0.0
+                if decision != st.mode:
+                    self._swap(st, decision, controller)
+        r = st.result
+        r.wall_time = st.t
+        r.dropped_scrapes = inj.dropped_scrapes
+        r.param_flat, r.accum_flat = self._canonical_flat(st)
+        if controller is not None:
+            r.controller_summary = controller.summary()
+        return r
+
+    def run_schedule(self, steps: Sequence[GlobalStep],
+                     modes: Sequence[str]) -> SwitchResult:
+        """Replay a FIXED schedule of global steps (tokens + batch
+        indices per slot) through the mode programs, swapping wherever
+        ``modes`` changes — no sim clock, no faults.  This is the parity
+        entry point: the same schedule replayed with and without swaps
+        must produce bit-identical flat state when ``sync_impl="fused"``
+        (one program family), and kernel-tolerance-identical for
+        ``sync_impl="psum"`` (XLA psum vs sequential kernel sum differ
+        in the last ulp)."""
+        if len(steps) != len(modes):
+            raise ValueError(f"{len(steps)} steps but {len(modes)} modes")
+        for md in modes:
+            if md not in ("sync", "gba"):
+                raise ValueError(f"unknown mode {md!r}")
+        st = self._fresh_state(modes[0] if steps else "sync")
+        st.mode = modes[0] if steps else "sync"
+        r = st.result
+        for k, (gs, md) in enumerate(zip(steps, modes)):
+            if md != st.mode:
+                self._swap(st, md)
+            if len(gs.tokens) != self.m or len(gs.batches) != self.m:
+                raise ValueError(
+                    f"step {k}: expected {self.m} slots, got "
+                    f"{len(gs.tokens)} tokens / {len(gs.batches)} batches")
+            tokens = np.asarray(gs.tokens, np.int64)
+            slot_batches = [self._zeros_batch if b < 0 else self.batch_fn(b)
+                            for b in gs.batches]
+            r.tombstones += sum(1 for b in gs.batches if b < 0)
+            loss = self._exec(st, tokens, slot_batches)
+            kept = sum(1 for i, b in enumerate(gs.batches)
+                       if b >= 0 and st.gstep - tokens[i] <= self.cfg.iota)
+            real = sum(1 for b in gs.batches if b >= 0)
+            r.dropped_batches += real - kept
+            r.samples += kept * self.cfg.local_batch
+            st.gstep += 1
+            r.num_global_steps += 1
+            r.mode_steps[md] = r.mode_steps.get(md, 0) + 1
+            r.losses.append(loss)
+        r.param_flat, r.accum_flat = self._canonical_flat(st)
+        return r
+
+
+# ---------------------------------------------------------------------------
+# demo model + CLI (the Fig. 6 switching-trajectory bench drives this)
+# ---------------------------------------------------------------------------
+
+def demo_model(seed: int = 0):
+    """Tiny MLP regression with deliberately non-tile-multiple leaves
+    (1221-, 33-, 792-element leaves vs a 2048 tile) across three layer
+    groups — exercises the padded carryover paths without costing
+    compile time.  Returns (params, loss_fn, group_by)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = {
+        "l1": {"w": 0.3 * jax.random.normal(ks[0], (37, 33)),
+               "b": jnp.zeros((33,))},
+        "l2": {"w": 0.3 * jax.random.normal(ks[1], (33, 24)),
+               "b": jnp.zeros((24,))},
+        "head": {"w": 0.3 * jax.random.normal(ks[2], (24, 5)),
+                 "b": jnp.zeros((5,))},
+    }
+
+    def loss_fn(p, batch):
+        h = jnp.tanh(batch["x"] @ p["l1"]["w"] + p["l1"]["b"])
+        h = jnp.tanh(h @ p["l2"]["w"] + p["l2"]["b"])
+        out = h @ p["head"]["w"] + p["head"]["b"]
+        return jnp.mean((out - batch["y"]) ** 2)
+
+    return params, loss_fn, (lambda path: path[0])
+
+
+def demo_batch_fn(local_batch: int):
+    """Deterministic per-index batches: index i always yields the same
+    (x, y) — the property the parity tests rely on."""
+    def batch_fn(i: int) -> dict:
+        rng = np.random.default_rng(100_000 + i)
+        return {"x": rng.standard_normal((local_batch, 37)
+                                         ).astype(np.float32),
+                "y": rng.standard_normal((local_batch, 5)
+                                         ).astype(np.float32)}
+    return batch_fn
+
+
+def demo_plan(name: str, workers: int) -> FaultPlan:
+    if name == "quiet":
+        return FaultPlan.quiet(workers)
+    if name == "strained":
+        # the acceptance scenario: 25% stragglers at 4x + one transient
+        # crash early enough that BOTH the auto and the forced-sync run
+        # live through the outage and the rejoin
+        return FaultPlan.strained(workers, straggler_frac=0.25,
+                                  slowdown=4.0, crash_at=1.0,
+                                  recovery=2.0)
+    raise ValueError(f"unknown plan {name!r} (quiet|strained)")
+
+
+def main(argv: list[str] | None = None) -> dict:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N host-platform devices (consumed before "
+                         "jax init by the module prologue)")
+    ap.add_argument("--batches", type=int, default=240)
+    ap.add_argument("--local-batch", type=int, default=256)
+    ap.add_argument("--plan", default="strained",
+                    choices=("quiet", "strained"))
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "sync", "gba"))
+    ap.add_argument("--sync-impl", default="psum",
+                    choices=("psum", "fused"))
+    ap.add_argument("--decide-every", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compare-sync", action="store_true",
+                    help="also run forced-sync on the same plan and "
+                         "report speedup_vs_sync")
+    ap.add_argument("--json", action="store_true",
+                    help="print the result as one JSON line (last line "
+                         "of stdout)")
+    args = ap.parse_args(argv)
+
+    if jax.device_count() < args.workers:
+        ap.error(f"need {args.workers} devices, have {jax.device_count()} "
+                 f"(use --host-devices on CPU)")
+    mesh = jax.make_mesh((args.workers,), ("data",))
+    params, loss_fn, group_by = demo_model()
+    spec = ClusterSpec(num_workers=args.workers, base_speed=10_000.0,
+                       jitter=0.05, allreduce_latency=0.005,
+                       ps_roundtrip=0.001, seed=args.seed)
+    plan = demo_plan(args.plan, args.workers)
+    cfg = SwitchConfig(local_batch=args.local_batch,
+                       decide_every=args.decide_every,
+                       sync_impl=args.sync_impl)
+    driver = SwitchDriver(mesh, loss_fn, params, spec=spec, plan=plan,
+                          cfg=cfg, batch_fn=demo_batch_fn(args.local_batch),
+                          group_by=group_by)
+    res = driver.run(args.batches, mode=args.mode, seed=args.seed)
+    out = res.to_json()
+    out["plan"] = args.plan
+    out["deadlocked"] = 0           # a stalled run raises, never returns
+    if args.compare_sync:
+        sync = driver.run(args.batches, mode="sync", seed=args.seed)
+        out["sync_wall_time"] = sync.wall_time
+        out["sync_qps"] = sync.qps
+        out["sync_timeouts"] = sync.timeouts
+        out["sync_rejoins"] = sync.rejoins
+        out["speedup_vs_sync"] = (res.qps / sync.qps if sync.qps else
+                                  float("nan"))
+    if args.json:
+        print(json.dumps(out))
+    else:
+        for k, v in out.items():
+            print(f"{k}: {v}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,17 @@ single-device runs auto-fall back to ``none``:
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
         --reduced --fused --mesh 4x1 --host-devices 4 --steps 8 \
         --compress int8 --compress-warmup 2
+
+``--autoswitch`` (with a multi-device data axis) hands the run to the
+end-to-end switching harness (launch.switch_driver): the REAL compiled
+sync (pytree psum + Adagrad) and async (token-controlled fused-psum)
+steps for this arch run under a ``--plan`` fault plan (quiet|strained),
+an AutoSwitchController decides the mode from live per-worker rates, and
+the sync<->async swaps carry the flat params/accum across bit-exactly:
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
+        --reduced --mesh 4x1 --host-devices 4 --autoswitch \
+        --plan strained --batches 120
 """
 from __future__ import annotations
 
@@ -188,6 +199,49 @@ def run_wire_train(args, cfg, mesh, gba, stream, params,
     assert jnp.isfinite(loss), "quantized-wire run diverged"
 
 
+def run_autoswitch(args, cfg, mesh, params) -> None:
+    """End-to-end tuning-free switching on this arch's REAL compiled
+    steps: SwitchDriver runs sync (pytree psum + Adagrad) vs async
+    (token-controlled fused-psum on the canonical layer-grouped layout)
+    under the ``--plan`` fault plan, switching on live telemetry."""
+    from repro.core.autoswitch import AutoSwitchController
+    from repro.launch.steps import make_loss_fn
+    from repro.launch.switch_driver import (SwitchConfig, SwitchDriver,
+                                            demo_plan)
+    from repro.sim.cluster import ClusterSpec
+
+    m = mesh.shape["data"]
+    gba = GBAConfig(local_batch=args.batch, buffer_size=m,
+                    staleness_tolerance=args.iota)
+    layout, _ = init_fused_train_state(params, gba, mesh=mesh,
+                                       layer_groups=True)
+    stream = make_lm_stream(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+    def batch_fn(i: int) -> dict:
+        b = stream.batch(i)
+        return {"tokens": b["tokens"], "labels": b["labels"]}
+
+    spec = ClusterSpec(num_workers=m, base_speed=10_000.0, jitter=0.05,
+                       allreduce_latency=0.005, ps_roundtrip=0.001,
+                       seed=0)
+    plan = demo_plan(args.plan, m)
+    swcfg = SwitchConfig(local_batch=args.batch, iota=args.iota,
+                         lr=args.lr)
+    driver = SwitchDriver(mesh, make_loss_fn(cfg), params, spec=spec,
+                          plan=plan, cfg=swcfg, batch_fn=batch_fn,
+                          layout=layout)
+    res = driver.run(args.batches, mode="auto",
+                     controller=AutoSwitchController(
+                         min_dwell=swcfg.min_dwell))
+    print(f"autoswitch ({args.plan}): {res.num_global_steps} global "
+          f"steps, {res.switch_count} switch(es), mode steps "
+          f"{res.mode_steps}, first switch at gstep "
+          f"{res.time_to_first_switch_steps}, sim qps {res.qps:,.0f}, "
+          f"crashes {res.crashes} rejoins {res.rejoins} timeouts "
+          f"{res.timeouts}, swaps verified {res.swaps_verified}, "
+          f"final loss {res.losses[-1] if res.losses else float('nan'):.4f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS,
@@ -233,6 +287,18 @@ def main() -> None:
     ap.add_argument("--compress-warmup", type=int, default=2,
                     help="full-precision warmup global steps before the "
                          "lossy wire engages (re-jit at the boundary)")
+    ap.add_argument("--autoswitch", action="store_true",
+                    help="run the end-to-end switching harness "
+                         "(launch.switch_driver) on this arch's compiled "
+                         "sync/async steps under a --plan fault plan "
+                         "(needs a multi-device data axis)")
+    ap.add_argument("--plan", choices=("quiet", "strained"),
+                    default="strained",
+                    help="fault plan for --autoswitch: quiet (vacant "
+                         "cluster) or strained (25%% stragglers at 4x + "
+                         "one transient crash)")
+    ap.add_argument("--batches", type=int, default=120,
+                    help="local batches to stream through --autoswitch")
     ap.add_argument("--vocab", type=int, default=0,
                     help="run the streamed-embedding sparse smoke at this "
                          "hash capacity (e.g. 1000000) instead of an LM "
@@ -274,6 +340,13 @@ def main() -> None:
     params = T.init_model(jax.random.PRNGKey(0), cfg)
     print(f"{cfg.name}: {T.param_count(params) / 1e6:.1f}M params, "
           f"mesh {dict(mesh.shape)}")
+    if args.autoswitch:
+        if mesh.shape["data"] < 2:
+            ap.error("--autoswitch needs a multi-device data axis "
+                     "(e.g. --mesh 4x1 --host-devices 4 on CPU)")
+        with mesh:
+            run_autoswitch(args, cfg, mesh, params)
+        return
     # the fused flat buffer is single-host (no per-leaf shardings) and
     # costs buffer_size f32 copies of the params: auto-enable only for
     # Adagrad archs on the smoke mesh, explicit --fused elsewhere

@@ -120,3 +120,66 @@ def test_ps_throughput_cap_crossover():
                                        iota=4).metrics.qps
     assert q[("vac", "sync")] > q[("vac", "gba")]
     assert q[("str", "gba")] > 2.0 * q[("str", "sync")]
+
+
+def test_dead_worker_excluded_from_sync_min():
+    """A rate of exactly zero is a crashed/stalled worker, not an
+    infinitely slow one: it leaves the sync min() (a barrier would
+    exclude it, not wait forever) and is reported in summary()."""
+    c = AutoSwitchController()
+    s = c.estimate_speedup([1.0, 1.0, 1.0, 0.0])
+    assert np.isfinite(s) and abs(s - 1.0) < 1e-9
+    assert c.dead_workers == 1
+    assert c.summary()["dead_workers"] == 1
+
+
+def test_zero_rate_no_longer_pins_gba():
+    """Regression: a single zero rate used to return inf, instantly
+    forcing mode='gba' and pinning it there."""
+    c = AutoSwitchController()
+    assert np.isfinite(c.estimate_speedup([100.0, 100.0, 0.0]))
+    assert c.decide([1.0, 1.0, 1.0, 0.0]) == "sync"     # speedup 1.0
+    # and a dead worker on an otherwise-straggling cluster still
+    # produces the REAL heterogeneity estimate, not inf
+    c2 = AutoSwitchController()
+    s = c2.estimate_speedup([100.0, 100.0, 10.0, 0.0])
+    assert abs(s - 210.0 / 30.0) < 1e-9
+
+
+def test_all_dead_window_holds_mode():
+    c = AutoSwitchController()
+    assert np.isnan(c.estimate_speedup([0.0, 0.0]))
+    assert c.decide([0.0, 0.0]) == "sync"
+    assert c.dead_workers == 2
+
+
+def test_min_dwell_blocks_flapping():
+    """min_dwell decisions must pass after any switch before the next
+    one — one noisy window can no longer flap modes."""
+    c = AutoSwitchController(min_dwell=2)
+    # a fresh controller can still move on its very first decision
+    assert c.decide([10.0, 1.0, 1.0, 1.0]) == "gba"
+    # homogeneous windows want sync, but the dwell holds gba...
+    assert c.decide([1.0, 1.0, 1.0, 1.0]) == "gba"
+    assert c.decide([1.0, 1.0, 1.0, 1.0]) == "gba"
+    # ...until min_dwell decisions have passed
+    assert c.decide([1.0, 1.0, 1.0, 1.0]) == "sync"
+
+
+def test_min_dwell_zero_keeps_old_behavior():
+    c = AutoSwitchController()         # default min_dwell=0
+    assert c.decide([10.0, 1.0, 1.0, 1.0]) == "gba"
+    assert c.decide([1.0, 1.0, 1.0, 1.0]) == "sync"    # immediate flip
+
+
+def test_force_resets_dwell():
+    """force() (the driver's circuit breaker) restarts the dwell window
+    so the next min_dwell decisions cannot immediately flip back."""
+    import pytest
+    c = AutoSwitchController(min_dwell=2, mode="gba")
+    assert c.force("sync") == "sync"
+    assert c.decide([10.0, 1.0, 1.0, 1.0]) == "sync"   # held
+    assert c.decide([10.0, 1.0, 1.0, 1.0]) == "sync"   # held
+    assert c.decide([10.0, 1.0, 1.0, 1.0]) == "gba"    # dwell expired
+    with pytest.raises(ValueError):
+        c.force("warp")

@@ -1,0 +1,156 @@
+"""FaultPlan / FaultInjector: the deterministic fault scripts the
+end-to-end switching harness (launch.switch_driver) replays."""
+import numpy as np
+import pytest
+
+from repro.sim.cluster import ClusterSpec
+from repro.sim.faults import (CrashEvent, FaultInjector, FaultPlan,
+                              ScrapeDropout, StragglerWindow)
+
+
+# ---------------------------------------------------------------------------
+# plan construction / validation
+# ---------------------------------------------------------------------------
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        StragglerWindow(worker=-1)
+    with pytest.raises(ValueError):
+        StragglerWindow(worker=0, slowdown=0.0)
+    with pytest.raises(ValueError):
+        StragglerWindow(worker=0, start=5.0, end=1.0)
+    with pytest.raises(ValueError):
+        CrashEvent(worker=0, at=1.0, recovery=-1.0)
+    with pytest.raises(ValueError):
+        ScrapeDropout(start=3.0, end=1.0)
+    with pytest.raises(ValueError):
+        FaultPlan(num_workers=0)
+    with pytest.raises(ValueError):
+        FaultPlan(2, stragglers=(StragglerWindow(worker=5),))
+    with pytest.raises(ValueError):
+        FaultPlan(2, crashes=(CrashEvent(worker=2, at=1.0),))
+
+
+def test_plan_crashes_sorted_by_time():
+    p = FaultPlan(4, crashes=(CrashEvent(1, 9.0), CrashEvent(0, 2.0),
+                              CrashEvent(2, 5.0)))
+    assert [c.at for c in p.crashes] == [2.0, 5.0, 9.0]
+
+
+def test_slowdown_windows_compose():
+    p = FaultPlan(4, stragglers=(
+        StragglerWindow(1, 4.0),                    # whole run
+        StragglerWindow(1, 2.0, start=10.0, end=20.0),
+        StragglerWindow(2, 3.0, start=0.0, end=5.0)))
+    assert p.slowdown(0, 1.0) == 1.0
+    assert p.slowdown(1, 1.0) == 4.0
+    assert p.slowdown(1, 15.0) == 8.0               # overlapping multiply
+    assert p.slowdown(2, 4.9) == 3.0
+    assert p.slowdown(2, 5.0) == 1.0                # end-exclusive
+    assert p.straggler_workers() == (1, 2)
+
+
+def test_scrape_dropout_window():
+    p = FaultPlan(2, dropouts=(ScrapeDropout(1.0, 2.0),))
+    assert not p.scrape_lost(0.5)
+    assert p.scrape_lost(1.0)
+    assert p.scrape_lost(1.99)
+    assert not p.scrape_lost(2.0)
+
+
+def test_strained_plan_deterministic_and_shaped():
+    """The acceptance scenario: 25% stragglers at 4x + one transient
+    crash of a HEALTHY worker."""
+    a = FaultPlan.strained(8, seed=3)
+    b = FaultPlan.strained(8, seed=3)
+    assert a == b
+    assert len(a.straggler_workers()) == 2          # 25% of 8
+    assert all(w.slowdown == 4.0 for w in a.stragglers)
+    assert len(a.crashes) == 1
+    assert a.crashes[0].worker not in a.straggler_workers()
+    assert a.crashes[0].at == 2.0 * a.crashes[0].recovery
+
+
+def test_from_cluster_spec_matches_worker_speeds():
+    """Stragglers come from the SAME rng stream as ``worker_speeds``, so
+    the plan slows exactly the workers the sim slows."""
+    spec = ClusterSpec(num_workers=8, straggler_frac=0.25,
+                       straggler_slowdown=4.0, failure_rate=0.02,
+                       recovery_time=3.0, seed=5)
+    plan = FaultPlan.from_cluster_spec(spec, horizon=200.0)
+    speeds = spec.worker_speeds(np.random.default_rng(spec.seed))
+    slow = tuple(w for w in range(8) if speeds[w] < spec.base_speed)
+    assert plan.straggler_workers() == slow
+    assert all(c.recovery == 3.0 for c in plan.crashes)
+    assert all(0 <= c.at < 200.0 for c in plan.crashes)
+    # replayable: same spec -> identical plan
+    assert plan == FaultPlan.from_cluster_spec(spec, horizon=200.0)
+
+
+def test_from_cluster_spec_no_failure_rate_no_crashes():
+    spec = ClusterSpec(num_workers=4, failure_rate=0.0, seed=1)
+    assert FaultPlan.from_cluster_spec(spec, horizon=100.0).crashes == ()
+
+
+# ---------------------------------------------------------------------------
+# injector runtime
+# ---------------------------------------------------------------------------
+
+def _quiet_spec(n=4):
+    return ClusterSpec(num_workers=n, base_speed=1000.0, jitter=0.0,
+                       straggler_frac=0.0, seed=0)
+
+
+def test_injector_worker_count_mismatch():
+    with pytest.raises(ValueError):
+        FaultInjector(FaultPlan.quiet(4), _quiet_spec(2))
+
+
+def test_injector_duration_applies_slowdown():
+    plan = FaultPlan(4, stragglers=(StragglerWindow(1, 4.0),))
+    inj = FaultInjector(plan, _quiet_spec(), seed=0)
+    base = inj.duration(0, 1.0, 100)
+    assert base == pytest.approx(0.1)
+    assert inj.duration(1, 1.0, 100) == pytest.approx(4 * base)
+
+
+def test_injector_crash_fires_once_then_rejoins():
+    plan = FaultPlan(4, crashes=(CrashEvent(2, at=5.0, recovery=3.0),))
+    inj = FaultInjector(plan, _quiet_spec(), seed=0)
+    assert inj.crash_between(2, 0.0, 4.0) is None
+    assert inj.crash_between(1, 0.0, 10.0) is None  # other workers fine
+    ev = inj.crash_between(2, 4.0, 6.0)
+    assert ev is not None and ev.at == 5.0
+    assert inj.lost_tokens == 1
+    assert inj.is_down(2, 7.9) and not inj.is_down(2, 8.0)
+    # a crash event fires exactly once
+    assert inj.crash_between(2, 4.0, 6.0) is None
+    assert inj.lost_tokens == 1
+
+
+def test_injector_scrape_dropout_counted():
+    plan = FaultPlan(2, dropouts=(ScrapeDropout(1.0, 2.0),))
+    inj = FaultInjector(plan, _quiet_spec(2), seed=0)
+    rates = [1.0, 2.0]
+    assert inj.scrape(0.5, rates) == rates
+    assert inj.scrape(1.5, rates) is None
+    assert inj.dropped_scrapes == 1
+
+
+def test_injector_apply_failures():
+    plan = FaultPlan(2, apply_failures=(3, 4, 5))
+    inj = FaultInjector(plan, _quiet_spec(2), seed=0)
+    assert not inj.apply_fails(2)
+    assert inj.apply_fails(3) and inj.apply_fails(5)
+
+
+def test_injector_deterministic_across_instances():
+    """Two injectors on the same (plan, spec, seed) draw identical
+    durations — what makes the auto vs forced-sync legs comparable."""
+    spec = ClusterSpec(num_workers=4, jitter=0.2, seed=0)
+    plan = FaultPlan.strained(4)
+    a = FaultInjector(plan, spec, seed=7)
+    b = FaultInjector(plan, spec, seed=7)
+    for w in range(4):
+        for t in (0.0, 1.0, 2.5):
+            assert a.duration(w, t, 64) == b.duration(w, t, 64)

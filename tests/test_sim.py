@@ -87,3 +87,67 @@ def test_worker_failures_tolerated():
                 assert k - sl.token <= 4
     assert len(seen) + m.lost_batches <= 960
     assert len(seen) >= 960 - m.lost_batches - 16  # at most N in flight
+
+
+# ---------------------------------------------------------------------------
+# failure_rate / recovery_time crash path (Alg. 1)
+# ---------------------------------------------------------------------------
+
+def test_crashed_token_never_aggregated():
+    """Alg. 1: a crashed worker's gradient AND its token disappear.
+    With buffer_size=1 every surviving dispatch lands in exactly one
+    global step, so the lost batches are precisely the dispatched
+    indices missing from the schedule."""
+    spec = ClusterSpec(num_workers=4, jitter=0.1, failure_rate=0.15,
+                       recovery_time=2.0, seed=7)
+    s = simulate(spec, "gba", 200, 64, buffer_size=1, iota=4)
+    m = s.metrics
+    assert m.lost_batches > 0
+    seen = [sl.batch_index for slots in s.steps for sl in slots]
+    assert len(seen) == len(set(seen))              # each at most once
+    assert len(seen) == 200 - m.lost_batches        # lost ones NEVER land
+    assert set(seen) | (set(range(200)) - set(seen)) == set(range(200))
+    # SimMetrics reflects it: samples count only scheduled batches
+    assert m.samples == (200 - m.lost_batches) * 64
+
+
+def test_crashed_worker_rejoins_after_recovery_time():
+    """The crashed worker redispatches at t + recovery_time: with one
+    worker and zero jitter the rng stream (and so the crash pattern) is
+    identical across recovery_time values, and every crash with work
+    remaining delays the makespan by exactly the recovery delta."""
+    def run(recovery):
+        spec = ClusterSpec(num_workers=1, jitter=0.0, straggler_frac=0.0,
+                           failure_rate=0.1, recovery_time=recovery,
+                           seed=2)
+        return simulate(spec, "gba", 120, 64, buffer_size=1,
+                        iota=4).metrics
+
+    m1, m9 = run(1.0), run(9.0)
+    assert m1.lost_batches == m9.lost_batches > 0
+    diff = m9.wall_time - m1.wall_time
+    n = diff / 8.0                       # crashes that had work remaining
+    assert n > 0 and abs(n - round(n)) < 1e-6
+    assert round(n) <= m1.lost_batches
+
+
+def test_failure_rate_zero_loses_nothing():
+    spec = ClusterSpec(num_workers=4, jitter=0.1, failure_rate=0.0, seed=7)
+    m = simulate(spec, "gba", 200, 64, buffer_size=4, iota=4).metrics
+    assert m.lost_batches == 0
+    assert m.samples == 200 * 64
+
+
+def test_crash_losses_scale_with_failure_rate():
+    """More crash probability, more lost tokens — and the drop counters
+    stay separate: lost_batches (crashes) vs dropped_batches (Eq. 1)."""
+    def run(rate):
+        spec = ClusterSpec(num_workers=8, jitter=0.1, failure_rate=rate,
+                           recovery_time=1.0, seed=11)
+        return simulate(spec, "gba", 400, 64, buffer_size=8,
+                        iota=4).metrics
+
+    lo, hi = run(0.02), run(0.25)
+    assert 0 < lo.lost_batches < hi.lost_batches
+    # crash losses are NOT double-counted as staleness drops
+    assert lo.lost_batches + lo.dropped_batches <= 400
