@@ -23,7 +23,8 @@ import json
 COLUMNS = ("vmem_bytes", "launch_ratio", "buffer_ratio",
            "peak_gather_bytes", "bytes_on_wire", "compression_ratio",
            "audit_wire_dtype", "switch_count", "time_to_switch_steps",
-           "speedup_vs_sync")
+           "speedup_vs_sync", "hit_rate", "freshness_lag_steps",
+           "audit_cache_bytes", "audit_hit_skips_kernel")
 
 
 def _fmt(v) -> str:
@@ -78,9 +79,12 @@ def render(baseline: list[dict], fresh: list[dict]) -> str:
               "bytes_on_wire/compression_ratio may not grow, launch_ratio "
               "may not shrink, audit_wire_dtype must equal the baseline "
               "(GBA-COLL-005 verdict: the policy dtype when the compressed "
-              "trace is leak-free), and on the end-to-end switching rows "
+              "trace is leak-free), on the end-to-end switching rows "
               "switch_count / time_to_switch_steps may not grow while the "
-              "strained-cluster speedup_vs_sync may not shrink."]
+              "strained-cluster speedup_vs_sync may not shrink, and on the "
+              "online-serving rows hit_rate may not shrink, "
+              "freshness_lag_steps may not grow, and the cache geometry / "
+              "hit-skips-kernel audit columns must equal the baseline."]
     return "\n".join(lines)
 
 

@@ -14,12 +14,16 @@ baseline JSON (default ``BENCH_kernels.json``) and exits non-zero on a
 only catastrophic algorithmic blowups should trip it), any growth of a
 ``vmem_bytes``, ``buffer_ratio``, ``peak_gather_bytes``,
 ``gather_ratio``, ``bytes_on_wire``, ``compression_ratio``,
-``switch_count`` or ``time_to_switch_steps`` column, any shrink of a
-``launch_ratio`` or ``speedup_vs_sync`` column (the end-to-end switching
-trajectory rows from ``bench_fig6_switching.run_switching`` — sim-clock
+``switch_count``, ``time_to_switch_steps`` or ``freshness_lag_steps``
+column, any shrink of a
+``launch_ratio``, ``speedup_vs_sync`` or ``hit_rate`` column (the
+end-to-end switching trajectory rows from
+``bench_fig6_switching.run_switching`` and the online-serving rows from
+``bench_tab52_qps.run_serving`` — sim-clock/seeded
 deterministic, so they gate exactly), any change at all of an ``audit_*``
 column (auditor-derived collective census / launch-meta VMEM /
-quantized-wire dtype verdict), a
+quantized-wire dtype verdict / serving cache geometry and
+hit-skips-kernel proof), a
 baseline row that disappeared, or a fresh row missing from the baseline
 (uncommitted drift: adding a bench row without regenerating and
 committing the JSON fails fast) — the CI perf gate (scripts/ci.sh).
@@ -33,7 +37,7 @@ import sys
 import time
 import traceback
 
-JSON_SUITES = ("kernels", "roofline", "switching")
+JSON_SUITES = ("kernels", "roofline", "switching", "serving")
 # --check: max allowed us_per_call growth.  Interpret-mode wall time
 # swings ~4x with container/CI load (the bench docstrings call it noise;
 # the derived columns are the claims), so this only catches catastrophic
@@ -45,18 +49,27 @@ MONOTONE_COLS = ("vmem_bytes", "buffer_ratio", "peak_gather_bytes",
                  # end-to-end switching trajectory: more mode flaps or a
                  # later first switch on the same fault plan = regression
                  "switch_count",
-                 "time_to_switch_steps")         # --check: no growth at all
+                 "time_to_switch_steps",
+                 # serving: the live-sync snapshot may not fall further
+                 # behind the trainer on the same publish/sync plan
+                 "freshness_lag_steps")          # --check: no growth at all
 FLOOR_COLS = ("launch_ratio",
               # strained-cluster auto vs forced-sync, sim clock: the
               # Fig. 6 speedup claim may not shrink (deterministic —
               # seeded-rng timing, independent of jitted wall time)
-              "speedup_vs_sync")                 # --check: no shrink at all
+              "speedup_vs_sync",
+              # serving: the hot-ID cache must keep absorbing the Zipf
+              # head of a seeded request stream (deterministic counters)
+              "hit_rate")                        # --check: no shrink at all
 # --check: must EQUAL the baseline.  Auditor-derived structural columns
 # (collective census counts, launch-meta VMEM): any drift means the
 # collective schedule or kernel geometry changed, which must be a
-# deliberate baseline regeneration, never noise.
+# deliberate baseline regeneration, never noise.  The serving columns:
+# cache geometry (capacity * dim * 4 bytes) and the kernel-call-counter
+# proof that an all-hit batch skips the streamed kernel entirely.
 EXACT_COLS = ("audit_all_gather", "audit_all_to_all", "audit_vmem_bytes",
-              "audit_wire_dtype")
+              "audit_wire_dtype", "audit_cache_bytes",
+              "audit_hit_skips_kernel")
 
 
 def parse_derived(derived: str) -> dict:
@@ -205,6 +218,10 @@ def main() -> None:
         # gated switching trajectory: fixed size regardless of --fast
         # (the gate compares the committed baseline exactly)
         ("switching", bench_fig6_switching.run_switching),
+        # gated online-learning serving rows (V=1M hot-ID cache +
+        # live param sync; seeded, pull-based sync → deterministic)
+        ("serving", lambda: bench_tab52_qps.run_serving(
+            num_batches=32 if args.fast else 64)),
     ]
     selected = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

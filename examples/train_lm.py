@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.configs.base import GBAConfig
 from repro.data import make_lm_stream
-from repro.launch.steps import init_train_state, make_train_step
+from repro.launch.programs import build_programs
 from repro.models import transformer as T
 from repro.optim import get_optimizer
 
@@ -52,8 +52,9 @@ def main() -> None:
     opt = get_optimizer("adam", 3e-4)
     gba = GBAConfig(local_batch=args.batch, buffer_size=args.buffer,
                     staleness_tolerance=4)
-    step_fn = jax.jit(make_train_step(cfg, opt, gba), donate_argnums=0)
-    state = init_train_state(params, opt)
+    progs = build_programs(cfg, gba, mode="pytree", params=params,
+                           optimizer=opt, acc_dtype=jnp.float32)
+    step_fn, state = progs.step, progs.state
 
     t0 = time.perf_counter()
     first = None

@@ -75,6 +75,8 @@ echo "== kernel perf gate =="
 # kernels (interpret-mode micro-benches) + switching (the end-to-end
 # sync<->async trajectory: switch_count / time_to_switch_steps monotone,
 # strained speedup_vs_sync floored — bench_fig6_switching.run_switching
-# spawns the 4-host-device switch_driver subprocess)
-python -m benchmarks.run --only kernels,switching --fast --check --summary \
-    --json BENCH_kernels.json
+# spawns the 4-host-device switch_driver subprocess) + serving (the V=1M
+# online-learning rows: hit_rate floored, freshness_lag_steps monotone,
+# cache geometry and the all-hit-skips-kernel proof exact)
+python -m benchmarks.run --only kernels,switching,serving --fast --check \
+    --summary --json BENCH_kernels.json

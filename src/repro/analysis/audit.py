@@ -40,10 +40,11 @@ from repro.configs.base import GBAConfig, InputShape
 from repro.core.flat_sharded import ShardedFlatLayout
 from repro.core.gba_shard_map import (make_gba_fused_psum_step,
                                       make_gba_psum_step)
-from repro.launch.steps import (_loss_from_batch, _memory_len,
-                                abstract_cache, abstract_params,
-                                init_fused_train_state,
-                                make_decode_step, make_fused_train_step,
+from repro.launch.programs import (_loss_from_batch,
+                                   init_fused_train_state,
+                                   make_fused_train_step)
+from repro.launch.steps import (_memory_len, abstract_cache,
+                                abstract_params, make_decode_step,
                                 model_inputs)
 from repro.models import transformer as T
 from repro.optim import get_optimizer

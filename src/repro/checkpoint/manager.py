@@ -51,3 +51,11 @@ class CheckpointManager:
         if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         return steps[-1], self.restore(steps[-1])
+
+    def latest_path(self) -> tuple[int, str]:
+        """(step, path) of the newest checkpoint — what a serving
+        ``StaticSource.from_checkpoint`` resolves a directory to."""
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return steps[-1], self._path(steps[-1])

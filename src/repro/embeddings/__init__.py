@@ -1,8 +1,11 @@
+from repro.embeddings.hot_cache import (HotIDCache, cached_pooled_lookup,
+                                        fetch_rows)
 from repro.embeddings.table import (EmbeddingTable, StreamConfig,
                                     apply_sparse_grads, hash_ids, init_table,
                                     lookup, pooled_lookup, presence_counts,
                                     sparse_grads_to_dense)
 
-__all__ = ["EmbeddingTable", "StreamConfig", "apply_sparse_grads",
+__all__ = ["EmbeddingTable", "HotIDCache", "StreamConfig",
+           "apply_sparse_grads", "cached_pooled_lookup", "fetch_rows",
            "hash_ids", "init_table", "lookup", "pooled_lookup",
            "presence_counts", "sparse_grads_to_dense"]

@@ -10,6 +10,7 @@ knobs (``block_v``/``block_d``/``chunk_e``).
 """
 from __future__ import annotations
 
+import collections
 from typing import Any
 
 import jax
@@ -21,6 +22,15 @@ from repro.kernels.gba_aggregate import gba_aggregate
 from repro.kernels.gba_apply import gba_apply
 from repro.kernels.quantize import dequantize, quantize_minmax, quantize_sign
 from repro.kernels.runtime import set_interpret  # noqa: F401  (re-export)
+
+# Python-level invocation census of the eager wrappers below.  This is
+# the structural evidence the serving stack leans on: a hot-ID cache hit
+# must leave ``kernel_calls["pooled_lookup"]`` unchanged — the batch
+# never reached the streamed kernel (gated as ``audit_hit_skips_kernel``
+# in the serving bench and asserted by tests/test_serving_live.py).
+# Counts wrapper INVOCATIONS (including cached jit executions), not
+# traces — exactly what "did this request touch the kernel path" means.
+kernel_calls: collections.Counter = collections.Counter()
 
 
 def gba_aggregate_tree(grads_stacked: Any, tokens: jax.Array,
@@ -98,6 +108,7 @@ def pooled_lookup(ids: jax.Array, table: jax.Array, *,
                   interpret: bool | None = None) -> jax.Array:
     """Streamed pooled lookup: the (V, D) table stays in HBM; VMEM holds
     O(block_v * block_d + chunk_e * block_d) scratch regardless of V."""
+    kernel_calls["pooled_lookup"] += 1
     return embedding_bag(ids, table, block_v=block_v, block_d=block_d,
                          chunk_e=chunk_e,
                          interpret=runtime.resolve(interpret))
@@ -110,6 +121,7 @@ def pooled_lookup_grad(ids: jax.Array, grad_out: jax.Array, capacity: int,
                        interpret: bool | None = None
                        ) -> tuple[jax.Array, jax.Array]:
     """Streamed sorted-scatter backward with per-ID contributor counts."""
+    kernel_calls["pooled_lookup_grad"] += 1
     return embedding_bag_grad(ids, grad_out, capacity, block_v=block_v,
                               block_d=block_d, chunk_e=chunk_e,
                               interpret=runtime.resolve(interpret))

@@ -9,10 +9,23 @@ accumulator, and applies the optimizer every M-th microstep under
 ``lax.cond`` — the TPU-SPMD rendering of Algorithm 2's buffer (DESIGN.md
 §2).  Setting ``buffer_size=1, iota=big`` recovers plain synchronous
 training, which is exactly the paper's tuning-free switch.
+
+.. deprecated::
+    The six training-program factories that used to live here
+    (``make_train_step`` / ``init_train_state`` / ``make_fused_train_step``
+    / ``init_fused_train_state`` / ``make_wire_psum_steps`` /
+    ``init_wire_state``, plus ``jit_fused_train_step``) moved to
+    :mod:`repro.launch.programs`; build them through
+    :func:`repro.launch.programs.build_programs` instead.  The names here
+    are thin shims that forward to the same implementations with a
+    ``DeprecationWarning``, so existing call sites keep working
+    bit-for-bit.  Serve-step builders and the dryrun ``build_step``
+    assembly remain canonical here.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -20,9 +33,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import GBAConfig, InputShape, ModelConfig
-from repro.core.staleness import threshold_decay
 from repro.distributed import sharding as S
 from repro.distributed.act_sharding import set_act_spec, set_expert_spec
+from repro.launch import programs as _P
+from repro.launch.programs import (  # noqa: F401  (re-exports)
+    ARCH_ACC_DTYPE,
+    ARCH_OPTIMIZER,
+    _loss_from_batch,
+    make_loss_fn,
+)
 from repro.models import transformer as T
 from repro.optim import Optimizer, get_optimizer
 
@@ -80,115 +99,30 @@ def _memory_len(cfg: ModelConfig) -> int:
 
 
 # ---------------------------------------------------------------------------
-# train step with first-class GBA
+# deprecation shims over repro.launch.programs
 # ---------------------------------------------------------------------------
 
-def _loss_from_batch(params, cfg: ModelConfig, batch: dict) -> jax.Array:
-    memory = batch.get("image_embeds")
-    if "frames" in batch:
-        memory = T.encode_audio(params, cfg, batch["frames"])
-    return T.lm_loss(params, cfg, batch["tokens"], batch["labels"],
-                     memory=memory)
+def _shim(name: str, fn):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.launch.steps.{name} is deprecated; build training "
+            "programs through repro.launch.programs.build_programs "
+            "(or import the factory from repro.launch.programs).",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    return wrapper
 
 
-def make_loss_fn(cfg: ModelConfig):
-    """Standalone ``(params, batch) -> scalar loss`` closure over ``cfg``
-    — the signature the shard_map step builders
-    (:func:`repro.core.gba_shard_map.make_gba_psum_step` /
-    ``make_gba_fused_psum_step``) and the switching harness
-    (:class:`repro.launch.switch_driver.SwitchDriver`) consume."""
-    def loss_fn(params, batch):
-        return _loss_from_batch(params, cfg, batch)
-    return loss_fn
-
-
-def init_train_state(params: Any, optimizer: Optimizer,
-                     acc_dtype=jnp.float32) -> dict:
-    return {
-        "params": params,
-        "opt": optimizer.init(params),
-        "acc": jax.tree.map(
-            lambda p: jnp.zeros(p.shape, acc_dtype), params),
-        "micro": jnp.zeros((), jnp.int32),
-        "gstep": jnp.zeros((), jnp.int32),
-    }
-
-
-def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
-                    gba: GBAConfig):
-    """Returns train_step(state, batch, token) -> (state, loss)."""
-    m = gba.buffer_size
-    iota = gba.staleness_tolerance
-
-    def train_step(state, batch, token):
-        loss, grads = jax.value_and_grad(_loss_from_batch)(
-            state["params"], cfg, batch)
-        # token-control decay at the step this slot lands in (Eq. 1)
-        w = threshold_decay(token[None], state["gstep"], iota)[0]
-        acc = jax.tree.map(
-            lambda a, g: a + (g.astype(a.dtype) * (w / m).astype(a.dtype)),
-            state["acc"], grads)
-        micro = state["micro"] + 1
-        is_full = (micro % m) == 0
-
-        def apply(operands):
-            params, opt, acc = operands
-            params, opt = optimizer.update(params, acc, opt)
-            zeros = jax.tree.map(jnp.zeros_like, acc)
-            return params, opt, zeros
-
-        def noop(operands):
-            return operands
-
-        params, opt, acc = jax.lax.cond(
-            is_full, apply, noop, (state["params"], state["opt"], acc))
-        new_state = {"params": params, "opt": opt, "acc": acc,
-                     "micro": micro,
-                     "gstep": state["gstep"] + is_full.astype(jnp.int32)}
-        return new_state, loss
-
-    return train_step
-
-
-def init_fused_train_state(params: Any, gba: GBAConfig,
-                           initial_accum: float = 0.1,
-                           mesh: Mesh | None = None, axis: str = "data",
-                           tile: int | None = None,
-                           layer_groups: bool = True):
-    """State for the fused flat-buffer GBA step: params stay a pytree (the
-    model consumes them), the Adagrad accumulator and the M-slot gradient
-    buffer live flat.  Returns (layout, state).
-
-    With a ``mesh`` whose ``axis`` has >1 device the flat arrays use the
-    sharding-aware :class:`repro.core.flat_sharded.ShardedFlatLayout`
-    (leaf- and tile-aligned slices, one per PS shard); otherwise the
-    single-host ``FlatLayout``.  ``layer_groups`` (default on) makes the
-    sharded layout layer-grouped under the model's canonical grouping
-    (``models.transformer.param_group_key``): each layer group's extent
-    is contiguous and shard-aligned, so the layer-grouped collective
-    schedule (``core.gba_shard_map.make_gba_fused_psum_step``) gathers
-    one group at a time — per-device peak gathered bytes is the largest
-    group (``layout.peak_gather_bytes``), not the whole vector.  Pass
-    ``layer_groups=False`` for the ungrouped PR-4 layout.
-    """
-    if mesh is not None and mesh.shape[axis] > 1:
-        from repro.core.flat_sharded import init_sharded_flat_buffer
-        from repro.kernels.gba_apply import BLOCK_N
-        layout, buffer = init_sharded_flat_buffer(
-            params, gba.buffer_size, mesh.shape[axis],
-            tile or BLOCK_N,
-            group_by=T.param_group_key if layer_groups else None)
-        total = layout.padded_total
-    else:
-        from repro.core.gba import init_flat_buffer
-        layout, buffer = init_flat_buffer(params, gba.buffer_size)
-        total = layout.total
-    state = {
-        "params": params,
-        "accum": jnp.full((total,), initial_accum, jnp.float32),
-        "buffer": buffer,
-    }
-    return layout, state
+init_train_state = _shim("init_train_state", _P.init_train_state)
+make_train_step = _shim("make_train_step", _P.make_train_step)
+init_fused_train_state = _shim("init_fused_train_state",
+                               _P.init_fused_train_state)
+make_fused_train_step = _shim("make_fused_train_step",
+                              _P.make_fused_train_step)
+jit_fused_train_step = _shim("jit_fused_train_step", _P.jit_fused_train_step)
+make_wire_psum_steps = _shim("make_wire_psum_steps", _P.make_wire_psum_steps)
+init_wire_state = _shim("init_wire_state", _P.init_wire_state)
 
 
 def fused_state_specs(layout, mesh: Mesh, pspecs: Any,
@@ -196,129 +130,6 @@ def fused_state_specs(layout, mesh: Mesh, pspecs: Any,
     """PartitionSpecs matching ``init_fused_train_state``'s output —
     canonical constructor in ``distributed.sharding``."""
     return S.fused_state_specs(layout, mesh, pspecs, axis)
-
-
-def make_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
-                          lr: float = 1e-3, eps: float = 1e-10,
-                          mesh: Mesh | None = None, axis: str = "data"):
-    """Adagrad GBA step on the flat buffer: push the raveled gradient; on
-    the M-th microstep ONE ``gba_apply`` kernel launch does the token-decay
-    aggregation and the Adagrad update for the whole dense module (vs the
-    per-leaf aggregate -> optimizer XLA chain of ``make_train_step``).
-
-    With a ``mesh`` and a :class:`~repro.core.flat_sharded.ShardedFlatLayout`
-    the apply branch routes through ``make_sharded_apply``: the buffer
-    columns are sliced over ``axis`` (``P(None, axis)``) and every PS
-    shard launches ``gba_apply`` on its own contiguous tile-aligned slice
-    — still one launch per shard per global step, bit-exact with the
-    single-host path.  Without a mesh the layout is the single-host
-    ``FlatLayout`` and the apply is one global launch.
-
-    The param ravel/unravel lives INSIDE the apply branch: the M-1
-    buffer-fill microsteps pay only the gradient ravel (which feeds the
-    buffer anyway), not two whole-model copies.
-    """
-    from repro.core.gba import flat_buffer_push
-    from repro.kernels import ops
-    iota = gba.staleness_tolerance
-
-    sharded_apply = None
-    if mesh is not None:
-        from repro.core.flat_sharded import (ShardedFlatLayout,
-                                             make_sharded_apply)
-        if isinstance(layout, ShardedFlatLayout):
-            sharded_apply = make_sharded_apply(mesh, layout, axis=axis,
-                                               iota=iota, eps=eps)
-
-    def train_step(state, batch, token):
-        loss, grads = jax.value_and_grad(_loss_from_batch)(
-            state["params"], cfg, batch)
-        new_buffer, is_full = flat_buffer_push(
-            state["buffer"], layout.ravel(grads), token)
-
-        def do_apply(operands):
-            params, accum, grads_buf, tokens, step = operands
-            if sharded_apply is not None:
-                flat_p, new_accum = sharded_apply(
-                    layout.ravel(params), accum, grads_buf, tokens, step,
-                    jnp.asarray(lr, jnp.float32))
-            else:
-                flat_p, new_accum = ops.gba_apply_flat(
-                    layout.ravel(params), accum, grads_buf, tokens, step,
-                    lr, iota=iota, eps=eps)
-            return layout.unravel(flat_p), new_accum
-
-        def do_noop(operands):
-            params, accum, *_ = operands
-            return params, accum
-
-        params, accum = jax.lax.cond(
-            is_full, do_apply, do_noop,
-            (state["params"], state["accum"], new_buffer["grads"],
-             new_buffer["tokens"], state["buffer"]["step"]))
-        return {"params": params, "accum": accum,
-                "buffer": new_buffer}, loss
-
-    return train_step
-
-
-def jit_fused_train_step(cfg: ModelConfig, gba: GBAConfig, layout,
-                         lr: float = 1e-3, eps: float = 1e-10,
-                         mesh: Mesh | None = None, axis: str = "data"):
-    """The canonical jitted form of :func:`make_fused_train_step`: state is
-    DONATED (``donate_argnums=0``), so the flat (M, shard) buffer, the
-    Adagrad accumulator, and the params reuse their buffers every step
-    instead of double-allocating.  The static auditor's GBA-DON-001 rule
-    checks this property; launchers should jit through here rather than
-    wrapping ``make_fused_train_step`` ad hoc."""
-    return jax.jit(
-        make_fused_train_step(cfg, gba, layout, lr=lr, eps=eps,
-                              mesh=mesh, axis=axis),
-        donate_argnums=0)
-
-
-def make_wire_psum_steps(cfg: ModelConfig, gba: GBAConfig, layout,
-                         mesh: Mesh, *, compress=None, lr: float = 1e-3,
-                         eps: float = 1e-10, axis: str = "data"):
-    """Jitted (warm_step, compressed_step) pair for the worker-parallel
-    layer-grouped fused-psum schedule (``core.gba_shard_map``) with an
-    optional quantized wire (``core.compression.CompressionPolicy``).
-
-    Both phases share the model loss (``_loss_from_batch``).  With a
-    lossy policy the two entries are SEPARATE jitted programs — warmup
-    routes f32 (PR-5 bit-exact), the compressed phase routes int8 + the
-    per-tile sideband — and the driver (``launch.train``) switches at the
-    ``compress.warmup_steps`` boundary by calling the other function,
-    i.e. a re-jit, so each phase's jaxpr carries exactly one wire dtype
-    (auditor rule GBA-COLL-005).  With ``compress=None`` / scheme
-    ``"none"`` both entries are the same 5-arg uncompressed step.
-    """
-    from repro.core.gba_shard_map import make_gba_fused_psum_step
-
-    def loss_fn(params, batch):
-        return _loss_from_batch(params, cfg, batch)
-
-    build = functools.partial(
-        make_gba_fused_psum_step, mesh, loss_fn, layout,
-        iota=gba.staleness_tolerance, lr=lr, eps=eps, axis=axis,
-        compress=compress)
-    if compress is None or not compress.stateful:
-        step = jax.jit(build())
-        return step, step
-    return jax.jit(build(warm=True)), jax.jit(build(warm=False))
-
-
-def init_wire_state(layout, compress, mesh: Mesh, axis: str = "data"):
-    """Zero per-worker wire state (residual, and momentum for onebit)
-    placed with ``distributed.sharding.wire_state_specs`` —
-    ``(M, padded_total)`` f32 rows sharded ``P(axis, None)`` so worker
-    ``w``'s row lives with worker ``w``.  ``None`` for lossless
-    policies."""
-    if compress is None or not compress.stateful:
-        return None
-    wire = compress.init_wire_state(layout, mesh.shape[axis])
-    specs = S.wire_state_specs(layout, mesh, compress.scheme, axis)
-    return jax.device_put(wire, S.to_named(specs, mesh))
 
 
 def opt_state_specs(optimizer: Optimizer, pspecs: Any) -> Any:
@@ -366,13 +177,6 @@ def make_decode_step(cfg: ModelConfig):
 # jit assembly per (arch x shape x mesh)
 # ---------------------------------------------------------------------------
 
-# the paper's GBA mode runs Adam (Tab. 5.1, "Others"); the 1T MoE cannot hold
-# Adam's two f32 moments at 512 chips, so it trains with Adagrad — the very
-# optimizer the paper uses for its async mode (DESIGN.md §5)
-ARCH_OPTIMIZER = {"kimi-k2-1t-a32b": "adagrad"}
-ARCH_ACC_DTYPE = {"kimi-k2-1t-a32b": jnp.bfloat16}
-
-
 def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                gba: GBAConfig | None = None, serve_tp: bool = False,
                moe_ep: bool = False):
@@ -409,12 +213,12 @@ def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
         acc_dt = ARCH_ACC_DTYPE.get(cfg.name, jnp.float32)
         sspecs = train_state_specs(opt, pspecs)
         state_sds = jax.eval_shape(
-            functools.partial(init_train_state, optimizer=opt,
+            functools.partial(_P.init_train_state, optimizer=opt,
                               acc_dtype=acc_dt), pshapes)
         # donate the state like launch.train does — without this the
         # dryrun-lowered step double-allocates params + opt + acc
         # (auditor rule GBA-DON-001)
-        fn = jax.jit(make_train_step(cfg, opt, gba),
+        fn = jax.jit(_P.make_train_step(cfg, opt, gba),
                      in_shardings=(named(sspecs), named(bspecs),
                                    NamedSharding(mesh, P())),
                      out_shardings=(named(sspecs), None),

@@ -91,11 +91,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.configs.base import GBAConfig
 from repro.core.autoswitch import AutoSwitchController
 from repro.core.flat_sharded import ShardedFlatLayout
-from repro.core.gba_shard_map import (make_gba_fused_psum_step,
-                                      make_gba_psum_step)
-from repro.optim import get_optimizer
+from repro.launch.programs import build_programs
 from repro.sim.cluster import ClusterSpec
 from repro.sim.faults import FaultInjector, FaultPlan
 
@@ -327,20 +326,31 @@ class SwitchDriver:
         self._repl_shd = NamedSharding(mesh, P())
         self._pad_accum = np.asarray(
             (1.0 - pad_mask(layout)) * cfg.initial_accum)
-        # compiled programs
-        self._fused_plain = jax.jit(make_gba_fused_psum_step(
-            mesh, loss_fn, layout, iota=cfg.iota, lr=cfg.lr, eps=cfg.eps,
-            axis=axis))
+        # compiled programs, all through the unified builder
+        # (launch.programs.build_programs): async = the wire-mode
+        # fused-psum pair, sync = either the plain wire step shared
+        # zero-copy or a sync_psum bundle with its Adagrad
+        gba_cfg = GBAConfig(local_batch=cfg.local_batch,
+                            buffer_size=self.m,
+                            staleness_tolerance=cfg.iota)
+        self._fused_plain = build_programs(
+            None, gba_cfg, mode="wire", mesh=mesh, axis=axis,
+            layout=layout, loss_fn=loss_fn, lr=cfg.lr,
+            eps=cfg.eps).warm_step
         if self.compress is not None:
-            build = lambda warm: jax.jit(make_gba_fused_psum_step(
-                mesh, loss_fn, layout, iota=cfg.iota, lr=cfg.lr,
-                eps=cfg.eps, axis=axis, compress=self.compress, warm=warm))
-            self._fused_warm, self._fused_main = build(True), build(False)
+            wp = build_programs(
+                None, gba_cfg, mode="wire", mesh=mesh, axis=axis,
+                layout=layout, loss_fn=loss_fn, compress=self.compress,
+                lr=cfg.lr, eps=cfg.eps)
+            self._fused_warm = wp.warm_step
+            self._fused_main = wp.compressed_step
         if cfg.sync_impl == "psum":
-            self._opt = get_optimizer("adagrad", cfg.lr, eps=cfg.eps,
-                                      initial_accum=cfg.initial_accum)
-            self._sync_step = jax.jit(make_gba_psum_step(
-                mesh, loss_fn, self._opt, cfg.iota, axis=axis))
+            sp = build_programs(
+                None, gba_cfg, mode="sync_psum", mesh=mesh, axis=axis,
+                loss_fn=loss_fn, lr=cfg.lr, eps=cfg.eps,
+                initial_accum=cfg.initial_accum)
+            self._opt = sp.optimizer
+            self._sync_step = sp.step
         # zero batch template for tombstone slots (weight is exactly 0,
         # so content never reaches the params; zeros keep losses finite)
         tmpl = batch_fn(0)

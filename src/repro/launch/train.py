@@ -87,10 +87,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import GBAConfig
 from repro.data import make_lm_stream
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
-from repro.launch.steps import (ARCH_OPTIMIZER, fused_state_specs,
-                                init_fused_train_state, init_train_state,
-                                init_wire_state, jit_fused_train_step,
-                                make_train_step, make_wire_psum_steps)
+from repro.launch.programs import ARCH_OPTIMIZER, build_programs
 from repro.models import transformer as T
 from repro.optim import get_optimizer
 
@@ -154,15 +151,15 @@ def run_wire_train(args, cfg, mesh, gba, stream, params,
     each with exactly one wire dtype (auditor rule GBA-COLL-005)."""
     from repro.core.compression import CompressionPolicy
     m = mesh.shape["data"]
-    layout, state = init_fused_train_state(params, gba, mesh=mesh,
-                                           layer_groups=True)
     pol = CompressionPolicy(scheme=scheme,
                             warmup_steps=args.compress_warmup)
-    warm_step, comp_step = make_wire_psum_steps(
-        cfg, gba, layout, mesh, compress=pol, lr=args.lr)
-    wire = init_wire_state(layout, pol, mesh)
-    param_flat = jnp.asarray(layout.ravel(params))
-    accum = state["accum"]
+    progs = build_programs(cfg, gba, mode="wire", params=params, mesh=mesh,
+                           compress=pol, lr=args.lr)
+    layout = progs.layout
+    warm_step, comp_step = progs.warm_step, progs.compressed_step
+    wire = progs.wire_state
+    param_flat = progs.state["param_flat"]
+    accum = progs.state["accum"]
     f32_bytes = layout.padded_total * 4
     print(f"quantized wire ({scheme}): {m} workers x {layout.num_groups} "
           f"groups; route "
@@ -205,7 +202,7 @@ def run_autoswitch(args, cfg, mesh, params) -> None:
     (token-controlled fused-psum on the canonical layer-grouped layout)
     under the ``--plan`` fault plan, switching on live telemetry."""
     from repro.core.autoswitch import AutoSwitchController
-    from repro.launch.steps import make_loss_fn
+    from repro.launch.programs import make_loss_fn
     from repro.launch.switch_driver import (SwitchConfig, SwitchDriver,
                                             demo_plan)
     from repro.sim.cluster import ClusterSpec
@@ -213,8 +210,10 @@ def run_autoswitch(args, cfg, mesh, params) -> None:
     m = mesh.shape["data"]
     gba = GBAConfig(local_batch=args.batch, buffer_size=m,
                     staleness_tolerance=args.iota)
-    layout, _ = init_fused_train_state(params, gba, mesh=mesh,
-                                       layer_groups=True)
+    # build_programs for the canonical layer-grouped layout only — the
+    # driver compiles its own sync/async program pair from it
+    layout = build_programs(cfg, gba, mode="fused", params=params,
+                            mesh=mesh, place_state=False).layout
     stream = make_lm_stream(cfg.vocab_size, args.seq, args.batch, seed=0)
 
     def batch_fn(i: int) -> dict:
@@ -380,17 +379,12 @@ def main() -> None:
         return
     with mesh:
         if fused:
-            layout, state = init_fused_train_state(
-                params, gba, mesh=mesh, layer_groups=layer_groups)
-            step_fn = jit_fused_train_step(cfg, gba, layout, lr=args.lr,
-                                           mesh=mesh)
+            progs = build_programs(cfg, gba, mode="fused", params=params,
+                                   mesh=mesh, lr=args.lr,
+                                   layer_groups=layer_groups)
+            layout, state, step_fn = progs.layout, progs.state, progs.step
             from repro.core.flat_sharded import ShardedFlatLayout
             if isinstance(layout, ShardedFlatLayout):
-                from repro.distributed import sharding as S
-                pspecs = S.param_specs(
-                    jax.eval_shape(lambda t: t, params), mesh)
-                specs = fused_state_specs(layout, mesh, pspecs)
-                state = jax.device_put(state, S.to_named(specs, mesh))
                 print(f"sharded fused gba_apply path (Adagrad): flat "
                       f"buffer ({gba.buffer_size}, {layout.padded_total}) "
                       f"sliced over data={layout.num_shards} "
@@ -410,9 +404,9 @@ def main() -> None:
                 print(f"fused gba_apply path (Adagrad): flat buffer "
                       f"({gba.buffer_size}, {layout.total})")
         else:
-            step_fn = jax.jit(make_train_step(cfg, opt, gba),
-                              donate_argnums=0)
-            state = init_train_state(params, opt)
+            progs = build_programs(cfg, gba, mode="pytree", params=params,
+                                   optimizer=opt, acc_dtype=jnp.float32)
+            step_fn, state = progs.step, progs.state
         t0 = time.perf_counter()
         for i in range(args.steps):
             b = stream.batch(i)

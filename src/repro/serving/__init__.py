@@ -1,3 +1,34 @@
-from repro.serving.engine import Request, ServingEngine
+"""Stable public serving API.
 
-__all__ = ["Request", "ServingEngine"]
+Two engines over one parameter-source abstraction:
+
+* :class:`ServingEngine` — continuous-batching LM decode
+  (``serving.engine``);
+* :class:`RecsysScoringEngine` — batched ID-list scoring with the hot-ID
+  embedding cache (``serving.recsys``);
+* :class:`StaticSource` / :class:`LiveSource` + :class:`UpdateChannel` —
+  frozen-checkpoint vs streaming-from-the-trainer params
+  (``serving.sources``);
+* :class:`ServingConfig` — the shared knob dataclass.
+
+See serving/README.md for the param-sync protocol and the
+freshness/staleness contract.
+"""
+from repro.serving.config import ServingConfig
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.recsys import RecsysScoringEngine, init_scoring_params
+from repro.serving.sources import (LiveSource, ParamSource, Snapshot,
+                                   StaticSource, UpdateChannel)
+
+__all__ = [
+    "LiveSource",
+    "ParamSource",
+    "RecsysScoringEngine",
+    "Request",
+    "ServingConfig",
+    "ServingEngine",
+    "Snapshot",
+    "StaticSource",
+    "UpdateChannel",
+    "init_scoring_params",
+]

@@ -15,6 +15,15 @@ on the cache pytree (slot axis), keeping everything jit-compatible.
 Works with any decoder architecture in the registry (attention KV caches,
 ring buffers, SSM states alike — the cache pytree is slot-indexed on its
 batch axis).
+
+Online learning: the engine is constructed from a :class:`ParamSource`
+(``serving.sources``) rather than raw params.  It pins EXACTLY ONE
+parameter snapshot per decode step — ``_sync`` adopts the newest
+snapshot at the step boundary, so a live sync landing mid-step can never
+mix versions inside one forward pass.  KV already in a slot's cache was
+computed under the version current at its step; tokens after a swap are
+decoded under the new version against that cache — the standard online
+serving semantics (see serving/README.md for the freshness contract).
 """
 from __future__ import annotations
 
@@ -28,6 +37,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.serving.config import ServingConfig
+from repro.serving.sources import ParamSource, StaticSource
 
 
 @dataclass
@@ -64,14 +75,34 @@ def _slot_assign(cache_tree: Any, slot_cache: Any, slot: int) -> Any:
 
 
 class ServingEngine:
-    """Greedy-decoding continuous-batching engine."""
+    """Greedy-decoding continuous-batching engine.
 
-    def __init__(self, params: Any, cfg: ModelConfig, *, num_slots: int = 4,
-                 max_len: int = 256, sampler: Callable | None = None):
-        self.params = params
+    ``source`` is a :class:`~repro.serving.sources.ParamSource`; a raw
+    params pytree is also accepted (wrapped in a StaticSource) so frozen
+    checkpoint serving needs no ceremony.  ``config`` supplies the
+    engine knobs; the ``num_slots``/``max_len`` kwargs override it."""
+
+    def __init__(self, source: ParamSource | Any, cfg: ModelConfig, *,
+                 config: ServingConfig | None = None,
+                 num_slots: int | None = None,
+                 max_len: int | None = None,
+                 sampler: Callable | None = None):
+        if not isinstance(source, ParamSource):
+            source = StaticSource(source)
+        self.source = source
+        self.config = config or ServingConfig()
         self.cfg = cfg
+        num_slots = num_slots if num_slots is not None \
+            else self.config.num_slots
+        max_len = max_len if max_len is not None else self.config.max_len
         self.num_slots = num_slots
         self.max_len = max_len
+        snap = source.snapshot()
+        self.params = snap.params
+        self.param_version = snap.version
+        self.param_step = snap.step
+        self.syncs_adopted = 0
+        self.clamped_requests = 0
         self.queue: list[Request] = []
         self.active: list[Request | None] = [None] * num_slots
         self.completed: list[Request] = []
@@ -88,10 +119,35 @@ class ServingEngine:
         self.slot_remaining = np.zeros(num_slots, np.int64)
         self.tokens = jnp.zeros((num_slots, 1), jnp.int32)
 
+    # -- param sync --------------------------------------------------------
+
+    def _sync(self) -> None:
+        """Adopt the newest snapshot at a step boundary.  ``snapshot()``
+        never blocks (atomic reference read), so the decode hot path is
+        never stalled by the sync thread."""
+        snap = self.source.snapshot()
+        if snap.version != self.param_version:
+            self.params = snap.params
+            self.param_version = snap.version
+            self.param_step = snap.step
+            self.syncs_adopted += 1
+
+    def close(self, grace: float = 1.0) -> None:
+        self.source.close(grace)
+
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         assert len(req.prompt) < self.max_len, "prompt exceeds cache"
+        # admission bound: the slot writes cache position
+        # len(prompt) + k on decode step k, so the generated budget must
+        # keep every write inside the (num_slots, max_len) cache —
+        # without this clamp slot_pos runs PAST the cache whenever
+        # prompt_len + max_new_tokens > max_len
+        budget = self.max_len - len(req.prompt)
+        if req.max_new_tokens > budget:
+            req.max_new_tokens = budget
+            self.clamped_requests += 1
         self.queue.append(req)
 
     def _admit(self, slot: int, req: Request) -> None:
@@ -115,7 +171,8 @@ class ServingEngine:
 
     def step(self) -> int:
         """One decode step over all occupied slots; returns #active."""
-        self._refill()
+        self._sync()        # pin ONE snapshot version for this whole step
+        self._refill()      # prefills run under the same pinned version
         occupied = [s for s in range(self.num_slots)
                     if self.active[s] is not None]
         if not occupied:
@@ -156,4 +213,8 @@ class ServingEngine:
             "tokens_per_s": self.decode_tokens / dt if dt else 0.0,
             "slot_utilization": (self.decode_tokens
                                  / max(1, self.steps * self.num_slots)),
+            "param_version": self.param_version,
+            "param_step": self.param_step,
+            "syncs_adopted": self.syncs_adopted,
+            "clamped_requests": self.clamped_requests,
         }

@@ -1,0 +1,240 @@
+"""Parameter sources: where a serving engine's weights come from.
+
+The paper's setting is *online* learning — the model a request hits is
+continuously trained (GBA Sec. 5).  This module closes that train→serve
+loop with three pieces:
+
+* :class:`Snapshot` — an immutable ``(version, step, params)`` triple.
+  Engines pin ONE snapshot per decode/score step, so a sync landing
+  mid-step can never mix two parameter versions inside one output.
+* :class:`StaticSource` — the frozen-checkpoint degenerate case (version
+  never moves past 1).  ``StaticSource.from_checkpoint`` restores the
+  params pytree via :func:`repro.checkpoint.load_pytree`.
+* :class:`UpdateChannel` + :class:`LiveSource` — the online path.  The
+  trainer *publishes* parameter states into the channel (coalescing: only
+  the newest pending state is kept, touched-ID sets are unioned); a
+  LiveSource daemon thread *consumes* them at a configurable interval and
+  atomically swaps in a fresh immutable Snapshot.  This is the Bagua
+  async-model-average shape: the sync thread is fully decoupled from the
+  serving hot path — ``snapshot()`` is a plain attribute read, it never
+  takes the channel lock, never copies, never blocks — and shutdown is a
+  stop/grace protocol (``close()`` sets a stop event and joins with a
+  grace timeout).
+
+Consistency contract
+--------------------
+Snapshots are immutable and versioned; version increases by exactly 1 per
+applied sync.  Listeners (e.g. the hot-ID embedding cache) are notified
+*after* the swap with ``(snapshot, touched_ids)``; ``touched_ids=None``
+means "assume everything changed".  A reader holding snapshot v keeps a
+consistent view forever — syncs swap the reference, never mutate arrays.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, NamedTuple
+
+import numpy as np
+
+
+class Snapshot(NamedTuple):
+    """One immutable parameter state.  ``version`` is the source-local
+    sync counter (monotone, +1 per applied sync); ``step`` is the
+    TRAINER's global step this state came from — the freshness clock
+    (``freshness lag = trainer_step_now - snapshot.step``)."""
+    version: int
+    step: int
+    params: Any
+
+
+class ParamSource:
+    """Protocol: anything with ``snapshot() -> Snapshot``, listener
+    registration, and ``close()``.  Base class provides the listener
+    plumbing and a no-op close."""
+
+    def snapshot(self) -> Snapshot:
+        raise NotImplementedError
+
+    def add_listener(self, fn: Callable[[Snapshot, Any], None]) -> None:
+        """``fn(snapshot, touched_ids)`` is called after every version
+        swap.  ``touched_ids`` is a 1-D int array of embedding rows the
+        update touched, or None for "invalidate everything"."""
+        self._listeners = getattr(self, "_listeners", [])
+        self._listeners.append(fn)
+
+    def _notify(self, snap: Snapshot, touched: Any) -> None:
+        for fn in getattr(self, "_listeners", []):
+            fn(snap, touched)
+
+    def close(self, grace: float = 1.0) -> None:  # noqa: ARG002
+        return None
+
+
+class StaticSource(ParamSource):
+    """Frozen params (the pre-online-learning serving shape): one
+    Snapshot, version 1, forever."""
+
+    def __init__(self, params: Any, step: int = 0):
+        self._snap = Snapshot(version=1, step=int(step), params=params)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, step: int = 0,
+                        select: str | None = None) -> "StaticSource":
+        """Restore from an npz checkpoint file, or from a
+        :class:`~repro.checkpoint.manager.CheckpointManager` directory
+        (newest step wins and stamps the snapshot's ``step``).
+        ``select`` picks one subtree of the stored state — e.g.
+        ``"params"`` when the checkpoint holds a full train state."""
+        import os
+
+        from repro.checkpoint import load_pytree
+        if os.path.isdir(path):
+            from repro.checkpoint.manager import CheckpointManager
+            step, path = CheckpointManager(path).latest_path()
+        tree = load_pytree(path)
+        if select is not None:
+            tree = tree[select]
+        return cls(tree, step=step)
+
+    def snapshot(self) -> Snapshot:
+        return self._snap
+
+
+class UpdateChannel:
+    """The trainer-side mailbox of the live sync channel.
+
+    ``publish`` never blocks the trainer beyond a short lock: it replaces
+    the pending state (coalescing — if the serving side is slower than
+    the trainer, intermediate states are skipped, which is exactly the
+    async-model-average semantics) and unions the touched-ID sets so a
+    consumer that skips states still invalidates every row any skipped
+    state touched."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending: tuple[Any, int] | None = None   # (params, step)
+        self._touched: np.ndarray | None = None
+        self._touched_valid = True   # False once any publish omitted ids
+        self.published = 0
+        self.coalesced = 0
+        self.last_step = -1
+
+    def publish(self, params: Any, step: int,
+                touched_ids: Any | None = None) -> None:
+        """Offer a new parameter state.  ``params`` must be safe to hand
+        off (immutable jax arrays, or arrays the trainer will not mutate
+        in place).  ``touched_ids``: embedding rows this state changed
+        relative to the previously published one."""
+        with self._lock:
+            if self._pending is not None:
+                self.coalesced += 1
+            self._pending = (params, int(step))
+            self.last_step = int(step)
+            if touched_ids is None:
+                self._touched_valid = False
+                self._touched = None
+            elif self._touched_valid:
+                t = np.asarray(touched_ids).reshape(-1)
+                self._touched = (t if self._touched is None
+                                 else np.union1d(self._touched, t))
+            self.published += 1
+
+    def take(self) -> tuple[Any, int, np.ndarray | None] | None:
+        """Consumer side: pop the newest pending state (or None)."""
+        with self._lock:
+            if self._pending is None:
+                return None
+            params, step = self._pending
+            touched = self._touched if self._touched_valid else None
+            self._pending = None
+            self._touched = None
+            self._touched_valid = True
+            return params, step, touched
+
+
+class LiveSource(ParamSource):
+    """Streaming params from an :class:`UpdateChannel`, applied by a
+    daemon sync thread every ``sync_interval`` seconds.
+
+    * ``snapshot()`` is the hot path: one attribute read, no lock.
+    * ``unravel`` adapts the trainer's native state to serving params —
+      e.g. ``layout.unravel`` for the GBA trainer's flat vector.  It runs
+      on the SYNC thread, so even an expensive unravel never stalls a
+      decode step.
+    * ``sync_now()`` applies any pending state synchronously — the
+      deterministic path tests and benches drive (the thread is optional:
+      ``start=False`` gives a purely pull-based source).
+    * ``close(grace)`` is the stop/grace protocol: set the stop event,
+      join the thread up to ``grace`` seconds.  A closed source keeps
+      serving its last snapshot; it just stops syncing.
+    """
+
+    def __init__(self, channel: UpdateChannel, init_params: Any, *,
+                 init_step: int = 0, sync_interval: float = 0.05,
+                 unravel: Callable[[Any], Any] | None = None,
+                 start: bool = True):
+        self.channel = channel
+        self.sync_interval = float(sync_interval)
+        self._unravel = unravel
+        self._snap = Snapshot(version=1, step=int(init_step),
+                              params=init_params)
+        self._swap_lock = threading.Lock()   # serializes appliers only
+        self._stop = threading.Event()
+        self.syncs = 0
+        self._thread: threading.Thread | None = None
+        if start:
+            self._thread = threading.Thread(
+                target=self._loop, name="live-param-sync", daemon=True)
+            self._thread.start()
+
+    # -- hot path ----------------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        return self._snap          # atomic reference read; never blocks
+
+    # -- sync side ---------------------------------------------------------
+    def _apply(self, raw: Any, step: int, touched) -> Snapshot:
+        params = self._unravel(raw) if self._unravel is not None else raw
+        with self._swap_lock:
+            old = self._snap
+            snap = Snapshot(version=old.version + 1, step=int(step),
+                            params=params)
+            self._snap = snap      # THE atomic swap
+            self.syncs += 1
+        self._notify(snap, touched)
+        return snap
+
+    def sync_now(self) -> Snapshot | None:
+        """Apply the newest pending update, if any.  Returns the new
+        snapshot or None when nothing was pending."""
+        item = self.channel.take()
+        if item is None:
+            return None
+        return self._apply(*item)
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.sync_interval):
+            try:
+                self.sync_now()
+            except Exception:      # never kill serving over one bad sync
+                continue
+
+    def close(self, grace: float = 1.0) -> None:
+        """Stop/grace shutdown: signal the sync thread, join up to
+        ``grace`` seconds.  Idempotent."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=grace)
+            if self._thread.is_alive():   # pragma: no cover - grace blown
+                raise RuntimeError(
+                    "live-param-sync thread did not stop within grace")
+            self._thread = None
+
+    @property
+    def closed(self) -> bool:
+        return self._stop.is_set()
+
+    def freshness_lag_steps(self) -> int:
+        """Trainer steps the CURRENT snapshot is behind the newest
+        published state (0 when fully caught up or nothing published)."""
+        last = self.channel.last_step
+        return max(0, last - self._snap.step) if last >= 0 else 0

@@ -65,6 +65,29 @@ def test_slot_reuse_and_utilization():
     assert 0.5 <= stats["slot_utilization"] <= 1.0
 
 
+def test_admission_clamp_keeps_writes_in_cache():
+    """Regression: a request with prompt_len + max_new_tokens > max_len
+    used to run slot_pos past the cache; admission now clamps the
+    generation budget to the remaining cache room."""
+    cfg, params = _setup("mamba2-780m")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+    engine = ServingEngine(params, cfg, num_slots=1, max_len=16)
+    engine.submit(Request(uid=0, prompt=prompt, max_new_tokens=50))
+    stats = engine.run()
+    assert stats["completed"] == 1
+    assert stats["clamped_requests"] == 1
+    req = engine.completed[0]
+    assert len(req.output) == 16 - 10          # clamped budget
+    assert int(engine.slot_pos.max()) < 16     # every write stayed inside
+    # clamped output == the output of an in-budget request (pure prefix)
+    ref = ServingEngine(params, cfg, num_slots=1, max_len=16)
+    ref.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+    ref.run()
+    assert ref.clamped_requests == 0
+    assert req.output == ref.completed[0].output
+
+
 def test_eos_termination():
     cfg, params = _setup("mamba2-780m")
     rng = np.random.default_rng(2)
