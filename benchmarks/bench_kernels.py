@@ -74,6 +74,7 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
     ``audit_wire_dtype`` (exact-gated; the policy dtype only when the
     compressed trace passes GBA-COLL-005, else ``leak``)."""
     from repro.analysis.audit import probe_loss, trace_fused_step
+    from repro.analysis.dataflow import flow_fused_step
     from repro.analysis.jaxpr_audit import (census_counts, check_wire_dtypes,
                                             collective_census)
     from repro.core.compression import CompressionPolicy
@@ -98,19 +99,27 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
         # or the launch geometry changed and the baseline must be
         # regenerated deliberately
         probe_batch = {"x": jax.ShapeDtypeStruct((shards * 8,), jnp.float32)}
-        census = census_counts(collective_census(trace_fused_step(
-            layout, shards, probe_loss, probe_batch)))
+        site = f"bench/gba_apply_sharded/{shards}shard"
+        jx_plain = trace_fused_step(layout, shards, probe_loss, probe_batch)
+        census = census_counts(collective_census(jx_plain))
         # quantized-wire accounting + COLL-005 verdict on the compressed
         # trace: audit_wire_dtype is the policy dtype only when the trace
         # checks clean, so a f32 leak past warmup flips an exact-gated
         # column ("leak") instead of passing silently
         pol = CompressionPolicy(scheme="int8", warmup_steps=1)
-        wire_findings = check_wire_dtypes(
-            trace_fused_step(layout, shards, probe_loss, probe_batch,
-                             compress=pol),
-            layout, shards, pol,
-            f"bench/gba_apply_sharded/{shards}shard")
+        jx_int8 = trace_fused_step(layout, shards, probe_loss, probe_batch,
+                                   compress=pol)
+        wire_findings = check_wire_dtypes(jx_int8, layout, shards, pol, site)
         wire_dtype = pol.wire_dtype() if not wire_findings else "leak"
+        # staleness-taint verdict on the same two traces (GBA-FLOW-001/003:
+        # no raw gradient or error-feedback residual reaches the update),
+        # exact-gated at 0 by run --check
+        wire = {name: jax.ShapeDtypeStruct(shape, jnp.float32)
+                for name, shape in layout.wire_state_shapes(
+                    shards, pol.scheme).items()}
+        flow_findings = (
+            flow_fused_step(jx_plain, probe_batch, site=site)
+            + flow_fused_step(jx_int8, probe_batch, site=site, wire=wire))
         meta = launch_meta(sn, m)
         audit_vmem = meta.vmem_bytes(meta.vmem_counted)
         key = jax.random.PRNGKey(shards)
@@ -145,6 +154,7 @@ def _sharded_apply_rows(m: int = 8) -> list[str]:
             f"bytes_on_wire={pol.wire_bytes(layout)};"
             f"compression_ratio={pol.compression_ratio(layout):.3f};"
             f"audit_wire_dtype={wire_dtype};"
+            f"audit_flow_findings={len(flow_findings)};"
             f"tpu_roofline_us={traffic / HBM_BW * 1e6:.1f};"
             f"fusion=one_launch_per_ps_shard"))
     return rows

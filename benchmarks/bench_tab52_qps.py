@@ -16,9 +16,12 @@ DMA-streamed lookup kernel, and live param sync through
 ``UpdateChannel``/``LiveSource`` with touched-row invalidation.  The
 ``tab52.serving.*`` rows are CI-gated (benchmarks.run --check):
 ``hit_rate`` floored, ``freshness_lag_steps`` monotone, and the
-structural ``audit_cache_bytes`` / ``audit_hit_skips_kernel`` columns
-exact — the latter is the kernel-call-counter proof that an all-hit
-batch never invokes the streamed kernel.  Everything is seeded and the
+structural ``audit_cache_bytes`` / ``audit_hit_skips_kernel`` /
+``audit_race_findings`` columns exact — ``audit_hit_skips_kernel`` is
+the kernel-call-counter proof that an all-hit batch never invokes the
+streamed kernel, and ``audit_race_findings`` is the GBA-RACE
+lock-discipline lint (``repro.analysis.race_lint``) over the serving
+modules this bench drives, gated at 0.  Everything is seeded and the
 sync thread is disabled (pull-based ``sync_now``), so the gated columns
 are deterministic; only the latency percentiles are wall time.
 """
@@ -113,10 +116,17 @@ def run_serving(num_batches: int = 64) -> list[str]:
                                ServingConfig, StaticSource, UpdateChannel,
                                init_scoring_params)
 
+    from repro.analysis.race_lint import lint_default
+
     rows = []
     params = init_scoring_params(jax.random.PRNGKey(0), SERVE_V, SERVE_DIM)
     cfg = ServingConfig(cache_capacity=SERVE_CACHE)
     hot = np.arange(SERVE_HOT, dtype=np.int64)
+    # lock-discipline lint over the very modules this bench exercises
+    # (serving/* + the hot-ID cache): exact-gated at 0 by run --check,
+    # so an unlocked mutation / torn read / callback-under-lock in the
+    # serving path flips a structural column, not just a unit test
+    race_findings, _ = lint_default()
 
     # ---- hot-ID cache in front of the streamed kernel (frozen params) ----
     eng = RecsysScoringEngine(StaticSource(params), config=cfg)
@@ -139,7 +149,8 @@ def run_serving(num_batches: int = 64) -> list[str]:
         f"hit_rate={st['hit_rate']:.4f};vocab={SERVE_V};"
         f"cache_rows={st['cache_rows']};"
         f"audit_cache_bytes={st['cache_bytes']};"
-        f"audit_hit_skips_kernel={hit_skips}"))
+        f"audit_hit_skips_kernel={hit_skips};"
+        f"audit_race_findings={len(race_findings)}"))
 
     # ---- live param sync: freshness + touched-row invalidation -----------
     chan = UpdateChannel()
@@ -174,7 +185,8 @@ def run_serving(num_batches: int = 64) -> list[str]:
         f"freshness_lag_steps={max_lag};syncs={syncs};"
         f"coalesced={chan.coalesced};"
         f"invalidations={eng.cache.invalidations};"
-        f"versions={st['param_version']}"))
+        f"versions={st['param_version']};"
+        f"audit_race_findings={len(race_findings)}"))
     eng.close()
     return rows
 

@@ -66,10 +66,15 @@ FLOOR_COLS = ("launch_ratio",
 # collective schedule or kernel geometry changed, which must be a
 # deliberate baseline regeneration, never noise.  The serving columns:
 # cache geometry (capacity * dim * 4 bytes) and the kernel-call-counter
-# proof that an all-hit batch skips the streamed kernel entirely.
+# proof that an all-hit batch skips the streamed kernel entirely.  The
+# finding-count columns (staleness-taint dataflow pass on the sharded
+# apply traces, lock-discipline lint on the serving modules) are gated
+# at their baseline value of 0: a raw-gradient leak or a serving race
+# flips a structural column, never noise.
 EXACT_COLS = ("audit_all_gather", "audit_all_to_all", "audit_vmem_bytes",
               "audit_wire_dtype", "audit_cache_bytes",
-              "audit_hit_skips_kernel")
+              "audit_hit_skips_kernel", "audit_flow_findings",
+              "audit_race_findings")
 
 
 def parse_derived(derived: str) -> dict:

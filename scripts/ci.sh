@@ -30,8 +30,13 @@
 #     every registered arch's hot paths against the rule registry —
 #     collective census vs the declared layer-grouped schedule, scalar-
 #     only psum, decode collective-free, dtype/donation/retrace lints,
-#     and the Pallas tile/VMEM/grid checks over exported launch metas.
-#     Any unsuppressed finding fails the lane with its rule ID.
+#     the Pallas tile/VMEM/grid checks over exported launch metas, the
+#     GBA-FLOW staleness-taint dataflow pass (Eq. (1) decay on every
+#     gradient path, exact-zero tombstone weights, residual closure,
+#     f32-master chain, masked aggregate divisor), and the GBA-RACE
+#     lock-discipline lint over the serving modules.  Suppressions live
+#     in the checked-in .gba-audit.toml (empty: the tree audits clean);
+#     any unsuppressed finding fails the lane with its rule ID.
 #  6. kernel micro-benchmarks in --check mode: fresh rows are gated
 #     against the committed BENCH_kernels.json (>5x us_per_call
 #     regression — interpret-mode wall time is load noise, only
@@ -69,7 +74,7 @@ else
 fi
 
 echo "== static audit (hot-path rules, all archs) =="
-python -m repro.analysis --check
+python -m repro.analysis --check --baseline .gba-audit.toml
 
 echo "== kernel perf gate =="
 # kernels (interpret-mode micro-benches) + switching (the end-to-end

@@ -1,16 +1,29 @@
 """Hot-path static auditor: traced (never executed) invariant checks.
 
-Three rule families over the compiled hot paths — jaxpr collective
+Five rule families over the compiled hot paths — jaxpr collective
 census + dtype/donation lints (``jaxpr_audit``), Pallas tile/VMEM/grid
-checks over exported launch metadata (``pallas_check``), and the
-retrace guard (``retrace_guard``) — wired into the per-arch matrix in
-``audit`` and the ``python -m repro.analysis`` CLI.  Rule IDs, what each
+checks over exported launch metadata (``pallas_check``), the retrace
+guard (``retrace_guard``), the staleness-taint dataflow pass
+(``dataflow``, GBA-FLOW), and the serving-thread lock-discipline lint
+(``race_lint``, GBA-RACE) — wired into the per-arch matrix in ``audit``
+and the ``python -m repro.analysis`` CLI.  Rule IDs, what each
 guarantees, and the suppression syntax live in ``rules`` and
 ``src/repro/analysis/README.md``.
 """
-from repro.analysis.audit import (AuditReport, audit_arch, audit_kernels,
+from repro.analysis.audit import (AuditReport, audit_arch, audit_dataflow,
+                                  audit_kernels, audit_serving,
                                   kernel_metas, run_audit,
                                   trace_fused_step, widening_budget)
+from repro.analysis.dataflow import (FlowContext, Taint, analyze,
+                                     check_divisor, check_no_raw,
+                                     check_no_residual, check_tombstone,
+                                     flow_aggregate_embedding,
+                                     flow_fused_step,
+                                     flow_fused_train_step,
+                                     flow_pytree_step, flow_sync_step,
+                                     out_paths, seed_taints, taint)
+from repro.analysis.race_lint import (analyze_classes, lint_classes,
+                                      lint_default, lint_sources)
 from repro.analysis.jaxpr_audit import (Collective, census_counts,
                                         check_donation,
                                         check_fused_psum_schedule,
@@ -30,14 +43,20 @@ from repro.analysis.rules import (RULES, Finding, apply_suppressions,
                                   parse_suppressions)
 
 __all__ = [
-    "AuditReport", "Collective", "Finding", "RULES",
-    "apply_suppressions", "audit_arch", "audit_kernels", "census_counts",
-    "check_donation", "check_fused_psum_schedule", "check_grid_bounds",
-    "check_launch", "check_no_collectives", "check_no_f64",
-    "check_retrace", "check_scalar_psum_only", "check_sync_psum_schedule",
-    "check_tiles", "check_vmem", "check_widening_budget",
-    "collective_census", "count_traces", "expected_fused_collectives",
-    "finding", "is_suppressed", "iter_eqns", "kernel_metas",
-    "parse_suppressions", "run_audit", "trace_fused_step",
+    "AuditReport", "Collective", "Finding", "FlowContext", "RULES",
+    "Taint", "analyze", "analyze_classes", "apply_suppressions",
+    "audit_arch", "audit_dataflow", "audit_kernels", "audit_serving",
+    "census_counts", "check_divisor", "check_donation",
+    "check_fused_psum_schedule", "check_grid_bounds", "check_launch",
+    "check_no_collectives", "check_no_f64", "check_no_raw",
+    "check_no_residual", "check_retrace", "check_scalar_psum_only",
+    "check_sync_psum_schedule", "check_tiles", "check_tombstone",
+    "check_vmem", "check_widening_budget", "collective_census",
+    "count_traces", "expected_fused_collectives", "finding",
+    "flow_aggregate_embedding", "flow_fused_step",
+    "flow_fused_train_step", "flow_pytree_step", "flow_sync_step",
+    "is_suppressed", "iter_eqns", "kernel_metas", "lint_classes",
+    "lint_default", "lint_sources", "out_paths", "parse_suppressions",
+    "run_audit", "seed_taints", "taint", "trace_fused_step",
     "undonated_paths", "widening_budget", "widening_converts",
 ]

@@ -4,20 +4,93 @@
     PYTHONPATH=src python -m repro.analysis --arch granite-8b
     PYTHONPATH=src python -m repro.analysis --check \
         --suppress GBA-TILE-001@granite-8b/kernels/gba_apply
+    PYTHONPATH=src python -m repro.analysis --check --baseline .gba-audit.toml
     PYTHONPATH=src python -m repro.analysis --markdown >> "$GITHUB_STEP_SUMMARY"
 
 Exit status under ``--check`` is the number of unsuppressed findings
 (0 == every audited hot path clean).
+
+``--baseline`` reads the checked-in suppression file — deliberate,
+reviewable exceptions with a required reason per entry::
+
+    [[suppress]]
+    rule = "GBA-TILE-001"
+    site = "granite-8b/kernels/gba_apply"   # optional: all sites if absent
+    reason = "why this exception is deliberate"
+
+A baseline entry that suppresses nothing prints an unused-suppression
+warning so stale exceptions get cleaned up instead of hiding future
+regressions.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+from pathlib import Path
 
 from repro.analysis.audit import AUDIT_M, run_audit
 from repro.analysis.rules import RULES
 from repro.configs import ARCH_IDS
+
+
+def _parse_minimal_toml(text: str) -> dict:
+    """Fallback for pythons without :mod:`tomllib` (3.10): just enough
+    TOML for the baseline format — ``[[suppress]]`` table arrays of
+    ``key = "string"`` pairs, comments, blank lines."""
+    data: dict = {}
+    current = None
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[[") and line.endswith("]]"):
+            name = line[2:-2].strip()
+            current = {}
+            data.setdefault(name, []).append(current)
+            continue
+        key, sep, value = line.partition("=")
+        if not sep or current is None:
+            raise ValueError(
+                f"baseline line {lineno}: expected '[[suppress]]' or "
+                f"'key = \"value\"', got {raw!r}")
+        value = value.split("#", 1)[0].strip()
+        if not (value.startswith('"') and value.endswith('"')):
+            raise ValueError(
+                f"baseline line {lineno}: values must be quoted strings")
+        current[key.strip()] = value[1:-1]
+    return data
+
+
+def load_baseline(path) -> list[tuple[str, str | None, str]]:
+    """``.gba-audit.toml`` -> ``[(rule, site_or_None, reason), ...]``."""
+    p = Path(path)
+    if not p.is_file():
+        raise SystemExit(f"baseline file not found: {path}")
+    try:
+        import tomllib
+        data = tomllib.loads(p.read_text())
+    except ModuleNotFoundError:
+        data = _parse_minimal_toml(p.read_text())
+    entries = []
+    for entry in data.get("suppress", []):
+        if "rule" not in entry:
+            raise SystemExit(
+                f"baseline {path}: every [[suppress]] needs a 'rule'")
+        if not entry.get("reason"):
+            raise SystemExit(
+                f"baseline {path}: entry for {entry['rule']} needs a "
+                f"'reason' — exceptions must be reviewable")
+        entries.append((entry["rule"], entry.get("site") or None,
+                        entry["reason"]))
+    return entries
+
+
+def unused_baseline_entries(entries, reports):
+    """Baseline entries whose (rule, site) suppressed no finding."""
+    return [(rule, site, reason) for rule, site, reason in entries
+            if not any(f.rule == rule and (site is None or f.site == site)
+                       for rep in reports for f in rep.suppressed)]
 
 
 def render_text(reports, elapsed: float) -> str:
@@ -77,14 +150,26 @@ def main(argv=None) -> int:
                     help="PS shards / workers in the audited mesh")
     ap.add_argument("--markdown", action="store_true",
                     help="GitHub step-summary markdown instead of text")
+    ap.add_argument("--baseline", metavar="TOML",
+                    help="checked-in suppression file (.gba-audit.toml)")
     args = ap.parse_args(argv)
+
+    baseline = load_baseline(args.baseline) if args.baseline else []
+    suppressions = list(args.suppress) + [
+        rule + (f"@{site}" if site else "")
+        for rule, site, _ in baseline]
 
     t0 = time.perf_counter()
     reports = run_audit(args.arch, m=args.workers,
-                        suppressions=args.suppress)
+                        suppressions=suppressions)
     elapsed = time.perf_counter() - t0
     render = render_markdown if args.markdown else render_text
     print(render(reports, elapsed))
+    for rule, site, reason in unused_baseline_entries(baseline, reports):
+        print(f"warning: unused baseline suppression {rule}"
+              + (f"@{site}" if site else "")
+              + f" ({reason}) — remove it from {args.baseline}",
+              file=sys.stderr)
     total = sum(len(r.findings) for r in reports)
     return min(total, 125) if args.check else 0
 

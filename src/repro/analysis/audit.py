@@ -31,8 +31,10 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import dataflow as DFL
 from repro.analysis import jaxpr_audit as JA
 from repro.analysis import pallas_check as PC
+from repro.analysis import race_lint as RL
 from repro.analysis import retrace_guard as RG
 from repro.analysis.rules import Finding
 from repro.configs import ARCH_IDS, get_config
@@ -138,6 +140,7 @@ def audit_arch(arch: str, *, m: int = AUDIT_M,
     jx = trace_fused_step(layout, m, lm_loss, batch)
     rep.findings += JA.check_fused_psum_schedule(jx, layout, m, site)
     rep.findings += JA.check_no_f64(jx, site)
+    rep.findings += DFL.flow_fused_step(jx, batch, site=site)
     counts = JA.census_counts(JA.collective_census(jx))
     rep.stats.update(
         all_gather=counts.get("all_gather", 0),
@@ -166,6 +169,10 @@ def audit_arch(arch: str, *, m: int = AUDIT_M,
         rep.findings += JA.check_wire_dtypes(jc, layout, m, pol, site)
         rep.findings += JA.check_scalar_psum_only(jc, site)
         rep.findings += JA.check_no_f64(jc, site)
+        wire = {name: SDS(shape, jnp.float32) for name, shape in
+                layout.wire_state_shapes(m, scheme).items()}
+        rep.findings += DFL.flow_fused_step(jc, probe_batch, site=site,
+                                            wire=wire)
         if scheme == "int8":
             ccounts = JA.census_counts(JA.collective_census(jc))
             rep.stats.update(
@@ -190,8 +197,14 @@ def audit_arch(arch: str, *, m: int = AUDIT_M,
     rep.findings += JA.check_sync_psum_schedule(
         jsync, [l.shape for l in jax.tree.leaves(pshapes)],
         f"{arch}/sync_psum")
+    rep.findings += DFL.flow_sync_step(
+        jsync, pshapes, jax.eval_shape(opt.init, pshapes),
+        site=f"{arch}/sync_psum")
 
-    # d. fused train step: donation + retrace stability
+    # d. fused train step: donation + retrace stability + the FLOW
+    # taint pass (raw-grad sanitization, exact-zero tombstones, f32
+    # master chain) — one .trace() feeds both the lowering and the
+    # dataflow jaxpr
     site = f"{arch}/fused_train_step"
     params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshapes)
     gba = GBAConfig(local_batch=2, buffer_size=m,
@@ -200,12 +213,29 @@ def audit_arch(arch: str, *, m: int = AUDIT_M,
     step = make_fused_train_step(cfg, gba, flat_layout)
     tbatch = model_inputs(cfg, InputShape("audit", AUDIT_SEQ, 2, "train"))
     tok = SDS((), jnp.int32)
-    lowered = jax.jit(step, donate_argnums=0).lower(state, tbatch, tok)
+    traced = jax.jit(step, donate_argnums=0).trace(state, tbatch, tok)
     # args_info is ((args...), kwargs); the state is positional arg 0
-    rep.findings += JA.check_donation(lowered.args_info[0][0], site)
+    rep.findings += JA.check_donation(traced.lower().args_info[0][0], site)
+    rep.findings += DFL.flow_fused_train_step(
+        traced.jaxpr, state, site=site, m=m, iota=AUDIT_IOTA)
     state_sds = jax.tree.map(lambda x: SDS(x.shape, x.dtype), state)
     rep.findings += RG.check_retrace(
         step, lambda: ((state_sds, tbatch, tok), {}), site)
+
+    # d2. pytree train step (build_programs mode="pytree"): the same
+    # Eq. (1) contract holds leaf-by-leaf, tombstone and fresh tokens
+    # taint-checked on one trace
+    site = f"{arch}/pytree_step"
+    from repro.launch.programs import (ARCH_ACC_DTYPE, ARCH_OPTIMIZER,
+                                       init_train_state, make_train_step)
+    popt = get_optimizer(ARCH_OPTIMIZER.get(cfg.name, "adam"), AUDIT_LR)
+    pstate = jax.eval_shape(
+        lambda p: init_train_state(
+            p, popt, ARCH_ACC_DTYPE.get(cfg.name, jnp.float32)), pshapes)
+    pstep = make_train_step(cfg, popt, gba)
+    jpt = jax.make_jaxpr(pstep)(pstate, tbatch, tok)
+    rep.findings += DFL.flow_pytree_step(jpt, pstate, site=site,
+                                         iota=AUDIT_IOTA)
 
     # e. decode step: no collectives, no f64, no retrace
     site = f"{arch}/decode"
@@ -252,14 +282,36 @@ def audit_kernels() -> AuditReport:
     return rep
 
 
+def audit_dataflow() -> AuditReport:
+    """Arch-independent dataflow sites: the Alg. 2 aggregate's masked
+    divisor (GBA-FLOW-005)."""
+    rep = AuditReport("dataflow")
+    rep.findings += DFL.flow_aggregate_embedding(
+        site="dataflow/aggregate_embedding")
+    return rep
+
+
+def audit_serving() -> AuditReport:
+    """GBA-RACE lock-discipline lint over the serving modules + the
+    hot-ID cache (see ``race_lint.DEFAULT_MODULES``)."""
+    rep = AuditReport("serving")
+    findings, stats = RL.lint_default()
+    rep.findings += findings
+    rep.stats.update(stats)
+    return rep
+
+
 def run_audit(archs=None, *, m: int = AUDIT_M,
               suppressions=()) -> list[AuditReport]:
-    """Audit every requested arch plus the global kernel set, applying
-    ``RULE`` / ``RULE@site`` suppressions."""
+    """Audit every requested arch plus the global kernel set, the
+    dataflow sites, and the serving race lint, applying ``RULE`` /
+    ``RULE@site`` suppressions."""
     from repro.analysis.rules import apply_suppressions, parse_suppressions
     sup = parse_suppressions(suppressions)
     reports = [audit_arch(a, m=m) for a in (archs or ARCH_IDS)]
     reports.append(audit_kernels())
+    reports.append(audit_dataflow())
+    reports.append(audit_serving())
     for rep in reports:
         rep.findings, dropped = apply_suppressions(rep.findings, sup)
         rep.suppressed += dropped

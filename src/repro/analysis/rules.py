@@ -55,6 +55,45 @@ RULES: dict[str, str] = {
         "16MiB per-core budget"),
     "GBA-GRID-001": (
         "every BlockSpec index map stays in bounds over the whole grid"),
+    "GBA-FLOW-001": (
+        "no path from a raw per-token gradient to the optimizer update "
+        "bypasses the Eq. (1) decay-weight multiply (taint pass over the "
+        "traced step: a 'raw' tag must be cleared by a decay-mask mul "
+        "before it reaches a params/accum output)"),
+    "GBA-FLOW-002": (
+        "tombstone tokens propagate symbolic zero into the aggregate: at "
+        "the decay multiply, the concretely-evaluated weight of every "
+        "slot staler than iota is EXACTLY 0.0 (not just small) and every "
+        "fresh slot's weight is nonzero"),
+    "GBA-FLOW-003": (
+        "the error-feedback residual feeds only the next quantize, never "
+        "the apply: a 'residual' tag may reach params/accum outputs only "
+        "through the quantize kernel's code path"),
+    "GBA-FLOW-004": (
+        "bf16-param models update through an f32 master chain: no "
+        "sub-f32 float arithmetic on decayed-gradient values, and every "
+        "narrowing convert of an updated value is a single final "
+        "downcast (feeds outputs/stores, never further compute)"),
+    "GBA-FLOW-005": (
+        "the per-ID aggregate divisor counts only valid contributors: "
+        "the divide of a gradient aggregate must be by a count carrying "
+        "both the padding mask and the token-decay mask, never by a "
+        "constant"),
+    "GBA-RACE-001": (
+        "no unlocked shared mutation: an attribute written by the sync "
+        "thread, or one that is lock-guarded anywhere in its class, is "
+        "only mutated under the instance lock (a single plain attribute "
+        "assignment of a never-mutated-in-place object is blessed as an "
+        "immutable snapshot swap)"),
+    "GBA-RACE-002": (
+        "no torn multi-attribute view: a method reading two or more "
+        "lock-guarded attributes outside the lock can observe a torn "
+        "version/step pair; one unlocked guarded read (the snapshot "
+        "idiom) is blessed"),
+    "GBA-RACE-003": (
+        "no callback invoked while holding the lock: a method that calls "
+        "stored listener callables must not be reached from inside a "
+        "with-lock region (deadlock/reentrancy escape of shared state)"),
 }
 
 

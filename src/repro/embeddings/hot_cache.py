@@ -84,8 +84,9 @@ class HotIDCache:
 
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+        with self._lock:   # hits/misses move together under the lock
+            total = self.hits + self.misses
+            return self.hits / total if total else 0.0
 
     # -- read/write --------------------------------------------------------
     def get_many(self, ids: np.ndarray

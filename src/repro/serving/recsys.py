@@ -141,12 +141,17 @@ class RecsysScoringEngine:
 
     def stats(self) -> dict:
         lat = np.asarray(self.latencies_us, np.float64)
+        with self._sync_lock:
+            # one consistent view: a sync between these reads could
+            # otherwise pair the new version with the old step
+            version, step, adopted = (self._version, self.param_step,
+                                      self.syncs_adopted)
         out = {
             "requests": self.requests,
             "scored": self.scored,
-            "param_version": self._version,
-            "param_step": self.param_step,
-            "syncs_adopted": self.syncs_adopted,
+            "param_version": version,
+            "param_step": step,
+            "syncs_adopted": adopted,
             "hit_rate": self.cache.hit_rate if self.cache else 0.0,
             "cache_rows": len(self.cache) if self.cache else 0,
             "cache_bytes": self.cache.nbytes if self.cache else 0,

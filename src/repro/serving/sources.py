@@ -139,6 +139,12 @@ class UpdateChannel:
                                  else np.union1d(self._touched, t))
             self.published += 1
 
+    def newest_step(self) -> int:
+        """Newest published trainer step (-1 before any publish), read
+        under the channel lock for a consistent freshness view."""
+        with self._lock:
+            return self.last_step
+
     def take(self) -> tuple[Any, int, np.ndarray | None] | None:
         """Consumer side: pop the newest pending state (or None)."""
         with self._lock:
@@ -235,6 +241,14 @@ class LiveSource(ParamSource):
 
     def freshness_lag_steps(self) -> int:
         """Trainer steps the CURRENT snapshot is behind the newest
-        published state (0 when fully caught up or nothing published)."""
-        last = self.channel.last_step
-        return max(0, last - self._snap.step) if last >= 0 else 0
+        published state (0 when fully caught up or nothing published).
+
+        Read order matters for a consistent view: grab the snapshot
+        FIRST, then the newest published step under the channel lock.
+        A sync between the two reads can only make the snapshot newer
+        than ``last`` (clamped to 0) — reading in the other order could
+        report a phantom lag for a state the snapshot already includes.
+        """
+        snap = self._snap
+        last = self.channel.newest_step()
+        return max(0, last - snap.step) if last >= 0 else 0

@@ -5,6 +5,10 @@ from __future__ import annotations
 
 import functools
 import itertools
+import types
+from pathlib import Path
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -14,10 +18,14 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.analysis import audit as AU
+from repro.analysis import dataflow as DF
 from repro.analysis import jaxpr_audit as JA
 from repro.analysis import pallas_check as PC
+from repro.analysis import race_lint as RL
 from repro.analysis import retrace_guard as RG
 from repro.analysis import rules as R
+from repro.analysis.__main__ import (_parse_minimal_toml, load_baseline,
+                                     unused_baseline_entries)
 from repro.core.flat_sharded import ShardedFlatLayout
 from repro.core.gba_shard_map import make_gba_psum_step
 from repro.kernels.launch_meta import BlockMeta, LaunchMeta, ScratchMeta
@@ -277,6 +285,306 @@ def test_vmem_counts_scratch():
 
 
 # ---------------------------------------------------------------------------
+# dataflow taint pass (GBA-FLOW-*)
+# ---------------------------------------------------------------------------
+
+IOTA = 4
+GSTEP = 9
+TOKENS = np.array([9, 8, 4, 0], dtype=np.int32)   # slots 2, 3 are stale
+STALE = (GSTEP - TOKENS) > IOTA
+
+
+def _flow_trace(step_fn, p_dtype=jnp.float32):
+    return jax.make_jaxpr(step_fn)(
+        SDS((8,), p_dtype), SDS((4, 8), jnp.float32),
+        SDS((4,), jnp.int32), SDS((), jnp.int32))
+
+
+def _flow_seeds(concrete=True):
+    return [DF.taint(DF.PARAM), DF.taint(DF.RAW),
+            DF.taint(DF.TOKEN, val=TOKENS if concrete else None),
+            DF.taint(DF.STEP, val=np.int32(GSTEP) if concrete else None)]
+
+
+def _decay_weight(tokens, step):
+    return ((step - tokens) <= IOTA).astype(jnp.float32)
+
+
+def test_flow_001_trips_on_decay_bypass():
+    def bad(p, g, tokens, step):
+        return p - 0.01 * jnp.mean(g, axis=0)       # no Eq. (1) weighting
+
+    outs, _ = DF.analyze(_flow_trace(bad), _flow_seeds(), site="t")
+    fs = DF.check_no_raw(outs, ["p"], lambda _: True, "t")
+    assert rules_of(fs) == ["GBA-FLOW-001"]
+
+    def good(p, g, tokens, step):
+        w = _decay_weight(tokens, step)
+        return p - 0.01 * jnp.sum(g * w[:, None], axis=0)
+
+    outs, ctx = DF.analyze(_flow_trace(good), _flow_seeds(), site="t")
+    assert DF.check_no_raw(outs, ["p"], lambda _: True, "t") == []
+    # the concretely-evaluated mask proves the tombstone weights too
+    assert DF.check_tombstone(ctx, STALE, "t") == []
+
+
+def test_flow_002_trips_on_soft_tombstone_weight():
+    def soft(p, g, tokens, step):
+        # decays stale slots to 0.01 instead of dropping them: close
+        # enough to fool a numeric diff, rejected by the exact-zero rule
+        w = jnp.where((step - tokens) <= IOTA, 0.25, 0.01)
+        return p - jnp.sum(g * w[:, None], axis=0)
+
+    _, ctx = DF.analyze(_flow_trace(soft), _flow_seeds(), site="t")
+    fs = DF.check_tombstone(ctx, STALE, "t")
+    assert rules_of(fs) == ["GBA-FLOW-002"]
+    assert "EXACTLY" in fs[0].detail
+    # without concrete token seeds the mask is unprovable -> also a finding
+    _, ctx = DF.analyze(_flow_trace(soft), _flow_seeds(concrete=False),
+                        site="t")
+    assert rules_of(DF.check_tombstone(ctx, STALE, "t")) == ["GBA-FLOW-002"]
+
+
+def test_flow_003_trips_when_residual_reaches_apply():
+    def bad(p, g, r, tokens, step):
+        w = _decay_weight(tokens, step)
+        upd = jnp.sum((g + r) * w[:, None], axis=0)   # residual in update
+        return p - 0.01 * upd, r
+
+    def good(p, g, r, tokens, step):
+        w = _decay_weight(tokens, step)
+        upd = jnp.sum(g * w[:, None], axis=0)
+        return p - 0.01 * upd, r + upd    # residual -> next quantize only
+
+    args = (SDS((8,), jnp.float32), SDS((4, 8), jnp.float32),
+            SDS((4, 8), jnp.float32), SDS((4,), jnp.int32),
+            SDS((), jnp.int32))
+    seeds = [DF.taint(DF.PARAM), DF.taint(DF.RAW), DF.taint(DF.RESIDUAL),
+             DF.taint(DF.TOKEN, val=TOKENS),
+             DF.taint(DF.STEP, val=np.int32(GSTEP))]
+    outs, _ = DF.analyze(jax.make_jaxpr(bad)(*args), seeds, site="t")
+    fs = DF.check_no_residual(outs[:1], ["p"], lambda _: True, "t")
+    assert rules_of(fs) == ["GBA-FLOW-003"]
+    outs, _ = DF.analyze(jax.make_jaxpr(good)(*args), seeds, site="t")
+    assert DF.check_no_residual(outs[:1], ["p"], lambda _: True, "t") == []
+
+
+def test_flow_004_trips_on_narrow_update_chain():
+    bf = jnp.bfloat16
+
+    def bad_arith(p, g, tokens, step):
+        w = _decay_weight(tokens, step)
+        upd = jnp.sum(g * w[:, None], axis=0)
+        return p - (0.01 * upd).astype(bf)            # bf16 subtract
+
+    def bad_nonterminal(p, g, tokens, step):
+        w = _decay_weight(tokens, step)
+        upd = jnp.sum(g * w[:, None], axis=0)
+        return (p.astype(jnp.float32) - 0.01 * upd).astype(bf) * 2
+
+    def good(p, g, tokens, step):
+        w = _decay_weight(tokens, step)
+        upd = jnp.sum(g * w[:, None], axis=0)
+        return (p.astype(jnp.float32) - 0.01 * upd).astype(bf)
+
+    for fn in (bad_arith, bad_nonterminal):
+        _, ctx = DF.analyze(_flow_trace(fn, bf), _flow_seeds(),
+                            site="t", f32_chain=True)
+        assert rules_of(ctx.findings) == ["GBA-FLOW-004"], fn.__name__
+    _, ctx = DF.analyze(_flow_trace(good, bf), _flow_seeds(),
+                        site="t", f32_chain=True)
+    assert ctx.findings == []
+
+
+def test_flow_005_trips_on_constant_divisor():
+    def bad(ids, g, tokens, step):
+        w = _decay_weight(tokens, step)
+        return jnp.sum(g * w[:, None], axis=0) / 4.0   # mean over M, not
+        #                                                over contributors
+
+    def missing(ids, g, tokens, step):
+        w = _decay_weight(tokens, step)
+        return jnp.sum(g * w[:, None], axis=0)         # no mean at all
+
+    def good(ids, g, tokens, step):
+        valid = (ids >= 0).astype(jnp.float32)
+        w = _decay_weight(tokens, step) * valid
+        num = jnp.sum(g * w[:, None], axis=0)
+        return num / jnp.maximum(jnp.sum(w), 1.0)
+
+    args = (SDS((4,), jnp.int32), SDS((4, 8), jnp.float32),
+            SDS((4,), jnp.int32), SDS((), jnp.int32))
+    seeds = [DF.taint(DF.IDS), DF.taint(DF.RAW), DF.taint(DF.TOKEN),
+             DF.taint(DF.STEP)]
+    for fn in (bad, missing):
+        _, ctx = DF.analyze(jax.make_jaxpr(fn)(*args), seeds, site="t")
+        assert rules_of(DF.check_divisor(ctx, "t")) == ["GBA-FLOW-005"], \
+            fn.__name__
+    _, ctx = DF.analyze(jax.make_jaxpr(good)(*args), seeds, site="t")
+    assert DF.check_divisor(ctx, "t") == []
+
+
+def test_flow_seed_arity_mismatch_raises():
+    with pytest.raises(ValueError):
+        DF.analyze(_flow_trace(lambda p, g, t, s: p), _flow_seeds()[:2],
+                   site="t")
+
+
+# ---------------------------------------------------------------------------
+# serving-thread race lint (GBA-RACE-*)
+# ---------------------------------------------------------------------------
+
+RACE_BAD1 = '''
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def locked_add(self, n):
+        with self._lock:
+            self.total += n
+
+    def unlocked_add(self, n):
+        self.total += n
+'''
+
+RACE_BAD2 = '''
+import threading
+
+
+class Versioned:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.version = 0
+        self.step = 0
+
+    def bump(self):
+        with self._lock:
+            self.version = self.version + 1
+            self.step = self.step + 2
+
+    def view(self):
+        return (self.version, self.step)
+'''
+
+RACE_BAD3 = '''
+import threading
+
+
+class Publisher:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._listeners = []
+        self.value = 0
+
+    def subscribe(self, fn):
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _notify(self, v):
+        for fn in list(self._listeners):
+            fn(v)
+
+    def publish(self, v):
+        with self._lock:
+            self.value = v
+            self._notify(v)
+'''
+
+RACE_GOOD_SNAPSHOT = '''
+import threading
+
+
+class Source:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._snap = (0, 0)
+
+    def update(self, v, s):
+        self._snap = (v, s)     # plain rebind of an immutable snapshot
+
+    def view(self):
+        snap = self._snap       # ONE unlocked read: consistent by design
+        return snap
+'''
+
+
+def test_race_001_trips_on_unlocked_mutation():
+    fs, _ = RL.lint_sources({"bad1": RACE_BAD1})
+    assert rules_of(fs) == ["GBA-RACE-001"]
+    assert "unlocked_add" in fs[0].site
+
+
+def test_race_002_trips_on_torn_pair():
+    fs, _ = RL.lint_sources({"bad2": RACE_BAD2})
+    assert rules_of(fs) == ["GBA-RACE-002"]
+    assert "view" in fs[0].site and "version" in fs[0].detail
+
+
+def test_race_003_trips_on_callback_under_lock():
+    fs, _ = RL.lint_sources({"bad3": RACE_BAD3})
+    assert rules_of(fs) == ["GBA-RACE-003"]
+    assert "publish" in fs[0].site
+
+
+def test_race_snapshot_swap_is_blessed():
+    fs, stats = RL.lint_sources({"good": RACE_GOOD_SNAPSHOT})
+    assert fs == []
+    assert stats["race_classes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# audit baseline file (--baseline .gba-audit.toml)
+# ---------------------------------------------------------------------------
+
+def test_baseline_parse_roundtrip(tmp_path):
+    text = "\n".join([
+        "# comment",
+        "[[suppress]]",
+        'rule = "GBA-TILE-001"',
+        'site = "a/k"   # trailing comment',
+        'reason = "deliberate"',
+        "[[suppress]]",
+        'rule = "GBA-VMEM-002"',
+        'reason = "fleet-wide"',
+    ])
+    p = tmp_path / "b.toml"
+    p.write_text(text)
+    assert load_baseline(p) == [("GBA-TILE-001", "a/k", "deliberate"),
+                                ("GBA-VMEM-002", None, "fleet-wide")]
+    # the 3.10 fallback parser agrees with tomllib on the format
+    assert _parse_minimal_toml(text)["suppress"][0]["rule"] == "GBA-TILE-001"
+    with pytest.raises(ValueError):
+        _parse_minimal_toml("rule = unquoted")
+
+
+def test_baseline_requires_rule_reason_and_file(tmp_path):
+    p = tmp_path / "b.toml"
+    p.write_text('[[suppress]]\nrule = "GBA-TILE-001"\n')
+    with pytest.raises(SystemExit):
+        load_baseline(p)                       # reason is mandatory
+    p.write_text('[[suppress]]\nreason = "no rule"\n')
+    with pytest.raises(SystemExit):
+        load_baseline(p)                       # rule is mandatory
+    with pytest.raises(SystemExit):
+        load_baseline(tmp_path / "missing.toml")
+
+
+def test_baseline_unused_entries_and_checked_in_file():
+    rep = types.SimpleNamespace(
+        suppressed=[R.finding("GBA-TILE-001", "a/k", "x")])
+    entries = [("GBA-TILE-001", "a/k", "r"), ("GBA-TILE-001", "b/k", "r"),
+               ("GBA-VMEM-002", None, "r")]
+    assert unused_baseline_entries(entries, [rep]) == entries[1:]
+    # the checked-in baseline parses and is (deliberately) empty
+    repo_baseline = Path(__file__).resolve().parent.parent / ".gba-audit.toml"
+    assert load_baseline(repo_baseline) == []
+
+
+# ---------------------------------------------------------------------------
 # shipped hot paths audit clean
 # ---------------------------------------------------------------------------
 
@@ -285,6 +593,20 @@ def test_shipped_kernels_audit_clean():
     assert rep.ok, [str(f) for f in rep.findings]
     for meta in AU.kernel_metas():
         assert meta.total_vmem_bytes() <= PC.VMEM_BUDGET_BYTES
+
+
+def test_shipped_dataflow_audit_clean():
+    rep = AU.audit_dataflow()
+    assert rep.ok, [str(f) for f in rep.findings]
+
+
+def test_shipped_serving_race_free():
+    rep = AU.audit_serving()
+    assert rep.ok, [str(f) for f in rep.findings]
+    # the lint actually saw the serving thread machinery, not an empty set
+    assert rep.stats["race_entries"] >= 1
+    assert rep.stats["race_guarded_attrs"] >= 1
+    assert rep.stats["race_locked_regions"] >= 1
 
 
 def test_granite_full_matrix_clean():
